@@ -1,0 +1,57 @@
+"""Paper Sec. 7 / Fig. 9: compressed deblurring of an astronomical image.
+
+128x128 synthetic starfield (statistically matched to the paper's ~10%-lit
+Abell-2744 frame), order-5 raster blur, m = n/2, CPADMM recovery.  Paper
+criterion: original-vs-recovered MSE of order 1e-2 on [0,255]-scaled pixels,
+i.e. normalized MSE of order 1e-4; we report normalized MSE directly."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit
+
+H = W = 128
+ITERS = 600
+
+
+def main() -> None:
+    from repro.core import RecoveryProblem, solve
+    from repro.core.deblur import (
+        blurred_observation,
+        build_deblur_problem,
+        deblur_metrics,
+    )
+    from repro.data.synthetic import starfield
+
+    img = starfield(jax.random.PRNGKey(0), H, W, density=0.10, n_blobs=8)
+    p = build_deblur_problem(
+        jax.random.PRNGKey(1), img, blur_order=5, subsample=0.5, sensing="romberg"
+    )
+    prob = RecoveryProblem(op=p.op, y=p.y, x_true=p.image.reshape(-1))
+
+    t0 = time.perf_counter()
+    x, tr = solve(prob, "cpadmm", iters=ITERS, record_every=ITERS, alpha=1e-3, rho=0.01, sigma=0.01)
+    jax.block_until_ready(x)
+    wall = time.perf_counter() - t0
+
+    m = deblur_metrics(p, x)
+    blurred = blurred_observation(p)
+    blurred_nmse = float(jnp.mean((blurred - p.image) ** 2) / jnp.mean(p.image**2))
+    emit(
+        f"deblur_{H}x{W}",
+        wall * 1e6,
+        f"normalized_mse={float(m['normalized_mse']):.2e};"
+        f"mse={float(m['mse']):.2e};"
+        f"blurred_nmse={blurred_nmse:.2e};"
+        f"improvement={blurred_nmse / float(m['normalized_mse']):.0f}x;"
+        f"err_over_mean_intensity={float(m['mean_abs_err_over_mean_intensity']):.4f};"
+        f"iters={ITERS}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 3: memory footprint vs signal size — circulant O(n) vs dense O(n^2).
+
+Reports live ``nbytes`` of the actual operator data structures (the paper
+logs nvidia-smi; we log device buffer sizes, same quantity minus runtime
+overhead).  The dense column is analytical above DENSE_LIMIT to avoid
+allocating gigabytes on CI."""
+
+from __future__ import annotations
+
+import jax
+
+from .common import emit
+
+DENSE_LIMIT = 1 << 13
+
+
+def main() -> None:
+    from repro.core import densify, partial_gaussian_circulant
+
+    for logn in (10, 12, 14, 16, 18, 20):
+        n = 1 << logn
+        m = n // 2
+        op = partial_gaussian_circulant(jax.random.PRNGKey(0), n, m)
+        circ_bytes = op.circ.col.nbytes + op.circ.spec.nbytes + op.omega.nbytes
+        if n <= DENSE_LIMIT:
+            dense_bytes = densify(op).mat.nbytes
+            mode = "measured"
+        else:
+            dense_bytes = m * n * 4  # fp32, the paper's PISTA footprint
+            mode = "analytical"
+        # PADMM additionally stores the n x n inverse (Fig. 3's worst line)
+        padmm_bytes = n * n * 4 + dense_bytes
+        emit(
+            f"footprint_n{n}",
+            0.0,
+            f"circulant_B={circ_bytes};dense_A_B={dense_bytes};"
+            f"padmm_B={padmm_bytes};ratio={dense_bytes / circ_bytes:.0f};{mode}",
+        )
+
+
+if __name__ == "__main__":
+    main()

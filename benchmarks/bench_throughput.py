@@ -1,0 +1,40 @@
+"""Paper Fig. 6: algorithmic throughput (iterations/second) vs n for the four
+solver variants (the paper's GPU/CPU plots collapse to this CPU's numbers;
+the circulant-vs-dense gap is the portable part)."""
+
+from __future__ import annotations
+
+import jax
+
+from .common import build_problem, emit, time_fn
+
+SIZES = (1 << 10, 1 << 12, 1 << 14)
+ITERS = 100
+
+
+def main() -> None:
+    from repro.core import RecoveryProblem, densify, solve
+
+    for n in SIZES:
+        prob = build_problem(n)
+        rows = {}
+
+        def runner(p, method, **kw):
+            return lambda: solve(p, method, iters=ITERS, record_every=ITERS, **kw)[0]
+
+        t = time_fn(runner(prob, "ista", alpha=1e-4))
+        rows["cpista"] = ITERS / (t / 1e6)
+        t = time_fn(runner(prob, "cpadmm", alpha=1e-4, rho=0.01, sigma=0.01))
+        rows["cpadmm"] = ITERS / (t / 1e6)
+        if n <= (1 << 12):
+            dense_prob = RecoveryProblem(op=densify(prob.op), y=prob.y, x_true=prob.x_true)
+            t = time_fn(runner(dense_prob, "ista", alpha=1e-4))
+            rows["pista"] = ITERS / (t / 1e6)
+            t = time_fn(runner(dense_prob, "admm", alpha=1e-4, rho=0.01))
+            rows["padmm"] = ITERS / (t / 1e6)
+        derived = ";".join(f"{k}_iters_per_s={v:.0f}" for k, v in rows.items())
+        emit(f"throughput_n{n}", 1e6 / rows["cpista"], derived)
+
+
+if __name__ == "__main__":
+    main()

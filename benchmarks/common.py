@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, CSV emission, problem builders."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def build_problem(n: int, seed: int = 0, sensing: str = "gaussian", normalize=True):
+    from repro.core import RecoveryProblem, partial_gaussian_circulant, partial_romberg_circulant
+    from repro.data.synthetic import paper_regime, sparse_signal
+
+    m, k = paper_regime(n)
+    x = sparse_signal(jax.random.PRNGKey(seed), n, k)
+    if sensing == "gaussian":
+        op = partial_gaussian_circulant(jax.random.PRNGKey(seed + 1), n, m, normalize=normalize)
+    else:
+        op = partial_romberg_circulant(jax.random.PRNGKey(seed + 1), n, m)
+    return RecoveryProblem(op=op, y=op.matvec(x), x_true=x)

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (paper-artifact mapping in
+DESIGN.md Sec. 7).  ``python -m benchmarks.run [--only <name>]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (
+    bench_admm_recovery,
+    bench_deblur,
+    bench_error_trace,
+    bench_footprint,
+    bench_grad_compression,
+    bench_ista_recovery,
+    bench_matvec,
+    bench_throughput,
+)
+
+SUITES = {
+    "footprint": bench_footprint,  # Fig. 3
+    "admm_recovery": bench_admm_recovery,  # Fig. 4
+    "ista_recovery": bench_ista_recovery,  # Fig. 5
+    "throughput": bench_throughput,  # Fig. 6
+    "matvec": bench_matvec,  # Fig. 7
+    "error_trace": bench_error_trace,  # Fig. 8
+    "deblur": bench_deblur,  # Sec. 7 / Fig. 9
+    "grad_compression": bench_grad_compression,  # beyond-paper
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single suite")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

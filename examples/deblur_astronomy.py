@@ -1,0 +1,75 @@
+"""Compressed astronomical-image deblurring (paper Sec. 7, Fig. 9).
+
+    PYTHONPATH=src python examples/deblur_astronomy.py [--size 128] [--iters 600]
+
+Builds a synthetic starfield (the offline stand-in for the Abell-2744 Hubble
+frame), blurs it with the paper's order-5 raster filter, sparse-samples the
+blurred image at m = n/2, and jointly un-blurs + reconstructs with CPADMM
+using the fact that A = P (C B) is still partial-circulant.  Saves PGM
+renders of the original / blurred / recovered frames (viewable anywhere,
+no image libraries needed).
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RecoveryProblem, solve
+from repro.core.deblur import (
+    blurred_observation,
+    build_deblur_problem,
+    deblur_metrics,
+    recovered_image,
+)
+from repro.data.synthetic import starfield
+
+
+def save_pgm(path: str, img) -> None:
+    arr = np.asarray(jnp.clip(img, 0, 1) * 255).astype(np.uint8)
+    h, w = arr.shape
+    with open(path, "wb") as f:
+        f.write(f"P5 {w} {h} 255\n".encode())
+        f.write(arr.tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=128)
+    ap.add_argument("--iters", type=int, default=600)
+    ap.add_argument("--blur-order", type=int, default=5)
+    ap.add_argument("--out", default="artifacts/deblur")
+    args = ap.parse_args()
+
+    img = starfield(jax.random.PRNGKey(0), args.size, args.size, density=0.10, n_blobs=8)
+    p = build_deblur_problem(
+        jax.random.PRNGKey(1), img, blur_order=args.blur_order,
+        subsample=0.5, sensing="romberg",
+    )
+    n = img.size
+    print(f"image {args.size}x{args.size} (n={n}), blur L={args.blur_order}, m={p.op.m}")
+
+    prob = RecoveryProblem(op=p.op, y=p.y, x_true=img.reshape(-1))
+    t0 = time.time()
+    x_hat, trace = solve(prob, "cpadmm", iters=args.iters, record_every=max(1, args.iters // 6),
+                         alpha=1e-3, rho=0.01, sigma=0.01)
+    x_hat.block_until_ready()
+    wall = time.time() - t0
+
+    m = deblur_metrics(p, x_hat)
+    print(f"recovered in {wall:.1f}s / {args.iters} iters")
+    print(f"  normalized MSE      : {float(m['normalized_mse']):.2e} (paper: ~1e-4 order)")
+    print(f"  abs err / mean int. : {float(m['mean_abs_err_over_mean_intensity']):.4f} "
+          f"(paper: 0.0157)")
+    os.makedirs(args.out, exist_ok=True)
+    save_pgm(os.path.join(args.out, "original.pgm"), img)
+    save_pgm(os.path.join(args.out, "blurred.pgm"), blurred_observation(p))
+    save_pgm(os.path.join(args.out, "recovered.pgm"), recovered_image(p, x_hat))
+    print(f"renders in {args.out}/{{original,blurred,recovered}}.pgm")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --arch xlstm-350m --steps 200
+
+Uses the real substrate end to end: --arch picks any assigned architecture's
+*smoke-scaled* config widened to ~100M params, the synthetic token pipeline
+(deterministic per (seed, step) => restart never replays data), AdamW with
+warmup-cosine, atomic checkpointing every --ckpt-every steps, and automatic
+resume from the latest checkpoint.  Loss is expected to drop well below the
+uniform baseline ln(vocab) within a few hundred steps.
+"""
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.registry import smoke_config
+from repro.data.synthetic import token_batch
+from repro.models import steps as steps_mod
+from repro.optim.adamw import AdamWConfig
+
+
+def widen(cfg, d_model=512, n_layers=8, vocab=8192):
+    """Scale a smoke config up to ~100M params for a real training demo."""
+    heads = max(4, d_model // 128)
+    return dataclasses.replace(
+        cfg,
+        d_model=d_model,
+        n_layers=n_layers,
+        n_heads=heads,
+        n_kv_heads=heads if cfg.n_kv_heads == cfg.n_heads else max(1, heads // 4),
+        d_ff=(0 if cfg.d_ff == 0 else d_model * 4),
+        vocab=vocab,
+        head_dim=0,
+        loss_chunk=128,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = widen(smoke_config(args.arch))
+    from repro.models.config import count_params
+
+    print(f"arch={cfg.name}  params~{count_params(cfg)['total']/1e6:.0f}M "
+          f"vocab={cfg.vocab}  ln(V)={jnp.log(cfg.vocab):.2f}")
+
+    opt_cfg = AdamWConfig(lr_peak=3e-4, warmup_steps=20, total_steps=args.steps)
+    train_step = jax.jit(steps_mod.make_train_step(cfg, opt_cfg), donate_argnums=0)
+
+    state = steps_mod.init_train_state(jax.random.PRNGKey(args.seed), cfg, opt_cfg)
+    start = 0
+    latest = ckpt.latest_step(args.ckpt_dir)
+    if latest is not None:
+        start, state = ckpt.restore(args.ckpt_dir, latest, jax.eval_shape(lambda: state))
+        print(f"resumed from checkpoint step {start}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {"tokens": token_batch(args.seed, step, 0, args.batch, args.seq, cfg.vocab)}
+        state, metrics = train_step(state, batch)
+        if (step + 1) % 20 == 0:
+            toks = args.batch * args.seq * (step + 1 - start)
+            print(f"step {step+1:4d}  loss {float(metrics['loss']):.3f}  "
+                  f"acc {float(metrics['acc']):.3f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"tok/s {toks/(time.time()-t0):.0f}")
+        if (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, jax.device_get(state))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""--arch registry: full (assigned) configs + reduced smoke configs."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "codeqwen15_7b",
+    "granite_34b",
+    "minitron_4b",
+    "gemma_7b",
+    "deepseek_v3_671b",
+    "moonshot_v1_16b_a3b",
+    "zamba2_1p2b",
+    "pixtral_12b",
+    "xlstm_350m",
+    "whisper_large_v3",
+]
+
+# external ids (assignment spelling) -> module names
+ALIASES: Dict[str, str] = {
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "granite-34b": "granite_34b",
+    "minitron-4b": "minitron_4b",
+    "gemma-7b": "gemma_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "pixtral-12b": "pixtral_12b",
+    "xlstm-350m": "xlstm_350m",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def full_config(arch: str) -> ModelConfig:
+    return _module(arch).FULL.validate()
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE.validate()
+
+
+def all_arch_ids() -> List[str]:
+    return list(ARCH_IDS)
+
+
+# Shape cells (assignment): name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# long_500k runs only for sub-quadratic (SSM/hybrid) archs per the assignment.
+LONG_CONTEXT_ARCHS = {"zamba2_1p2b", "xlstm_350m"}
+
+
+def cells_for(arch: str):
+    """The (shape_name, ...) cells assigned to this arch."""
+    name = ALIASES.get(arch, arch)
+    out = []
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        if shape == "long_500k" and name not in LONG_CONTEXT_ARCHS:
+            continue  # full-attention archs skip 500k (DESIGN.md §Arch-applicability)
+        out.append(shape)
+    return out

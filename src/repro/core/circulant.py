@@ -1,0 +1,322 @@
+"""Circulant / partial-circulant sensing operators (paper Secs. 4.2-4.3).
+
+Conventions
+-----------
+The paper describes a circulant matrix by its *first row* ``v``:
+``A[i, j] = v[(j - i) mod n]``.  Internally we store the *first column*
+``col`` (``col[i] = v[(-i) mod n]``) because the eigenvalues of a circulant
+are exactly ``fft(first column)``::
+
+    C = F^H diag(fft(col)) F          (F = unitary DFT)
+
+so every product / transpose / inverse / composition becomes a pointwise
+operation on the length-``n//2+1`` real-FFT spectrum.  This is the O(n)
+representation the paper exploits (Fig. 3), and the FFT path is the TPU-native
+analogue of the paper's cache-friendly GPU kernels (DESIGN.md Sec. 2).
+
+All operators act on the trailing axis and broadcast over leading batch axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _rfft(x: Array, n: int) -> Array:
+    return jnp.fft.rfft(x, n=n, axis=-1)
+
+
+def _irfft(x: Array, n: int) -> Array:
+    return jnp.fft.irfft(x, n=n, axis=-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Circulant:
+    """Square circulant operator, stored as first column + cached spectrum."""
+
+    col: Array  # (n,) real, first column
+    spec: Array  # (n//2 + 1,) complex, rfft(col) == eigenvalues (half-plane)
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.col, self.spec), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def from_first_col(cls, col: Array) -> "Circulant":
+        col = jnp.asarray(col)
+        return cls(col=col, spec=_rfft(col, col.shape[-1]))
+
+    @classmethod
+    def from_first_row(cls, row: Array) -> "Circulant":
+        """Paper convention: ``A[i, j] = row[(j - i) mod n]``."""
+        row = jnp.asarray(row)
+        col = jnp.roll(row[..., ::-1], 1, axis=-1)  # col[i] = row[(-i) mod n]
+        return cls.from_first_col(col)
+
+    @classmethod
+    def from_spectrum(cls, spec: Array, n: int) -> "Circulant":
+        col = _irfft(spec, n)
+        return cls(col=col, spec=_rfft(col, n))  # re-fft keeps exact pairing
+
+    # -- basic facts -------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.col.shape[-1]
+
+    @property
+    def first_row(self) -> Array:
+        return jnp.roll(self.col[..., ::-1], 1, axis=-1)
+
+    def operator_norm(self) -> Array:
+        """Exact spectral norm: max |eigenvalue| = max |fft(col)|.
+
+        rfft covers the full spectrum for real ``col`` (conjugate symmetry).
+        """
+        return jnp.max(jnp.abs(self.spec))
+
+    # -- algebra (all O(n) / O(n log n)) ----------------------------------
+    def matvec(self, x: Array) -> Array:
+        """C @ x via the convolution theorem."""
+        return _irfft(self.spec * _rfft(x, self.n), self.n)
+
+    def rmatvec(self, x: Array) -> Array:
+        """C.T @ x.  For real circulants, spec(C.T) = conj(spec(C))."""
+        return _irfft(jnp.conj(self.spec) * _rfft(x, self.n), self.n)
+
+    def gram(self) -> "Circulant":
+        """C.T @ C — circulant with spectrum |spec|^2 (real, >= 0)."""
+        return Circulant.from_spectrum(
+            (jnp.abs(self.spec) ** 2).astype(self.spec.dtype), self.n
+        )
+
+    def compose(self, other: "Circulant") -> "Circulant":
+        """self @ other — circulants commute and multiply spectra."""
+        assert self.n == other.n, (self.n, other.n)
+        return Circulant.from_spectrum(self.spec * other.spec, self.n)
+
+    def add_scaled_identity(self, rho: float, sigma: float) -> "Circulant":
+        """rho * C + sigma * I."""
+        return Circulant.from_spectrum(rho * self.spec + sigma, self.n)
+
+    def inverse(self) -> "Circulant":
+        """C^{-1} via reciprocal spectrum (paper Alg. 3 line 2: the O(n log n)
+        inversion that replaces the O(n^3) dense inverse)."""
+        return Circulant.from_spectrum(1.0 / self.spec, self.n)
+
+    def transpose(self) -> "Circulant":
+        return Circulant.from_spectrum(jnp.conj(self.spec), self.n)
+
+    # -- oracles (O(n^2); tests / small-n baselines only) -----------------
+    def to_dense(self) -> Array:
+        n = self.n
+        i = jnp.arange(n)[:, None]
+        j = jnp.arange(n)[None, :]
+        return self.col[(i - j) % n]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartialCirculant:
+    """A = P @ C: random row subsampling of a square circulant (Sec. 4.3).
+
+    ``P`` is an m-by-n binary row selector for the index set ``omega``.
+    This is the paper's sensing operator for CPADMM, and the deblurring
+    operator when ``C = C_sense @ B_blur`` (Sec. 7).
+    """
+
+    circ: Circulant
+    omega: Array  # (m,) int32 sorted row indices
+
+    def tree_flatten(self):
+        return (self.circ, self.omega), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def n(self) -> int:
+        return self.circ.n
+
+    @property
+    def m(self) -> int:
+        return self.omega.shape[-1]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.m, self.n)
+
+    def matvec(self, x: Array) -> Array:
+        """A @ x = (C @ x)[omega]."""
+        return jnp.take(self.circ.matvec(x), self.omega, axis=-1)
+
+    def rmatvec(self, y: Array) -> Array:
+        """A.T @ y = C.T @ (P.T @ y) — scatter then circulant transpose."""
+        return self.circ.rmatvec(self.project_back(y))
+
+    def project_back(self, y: Array) -> Array:
+        """P.T @ y: scatter m measurements into an n-vector."""
+        shape = y.shape[:-1] + (self.n,)
+        out = jnp.zeros(shape, y.dtype)
+        return out.at[..., self.omega].set(y)
+
+    def operator_norm_bound(self) -> Array:
+        """||P C||_2 <= ||C||_2 (P is a selector with norm 1).
+
+        Used for the safe ISTA step size tau < 1/||A||^2 (paper Alg. 1).
+        """
+        return self.circ.operator_norm()
+
+    def to_dense(self) -> Array:
+        return self.circ.to_dense()[self.omega, :]
+
+
+# ---------------------------------------------------------------------------
+# Sensing-operator factories (paper Sec. 6 experimental setup)
+# ---------------------------------------------------------------------------
+
+
+def gaussian_circulant(
+    key: Array, n: int, dtype=jnp.float32, normalize: bool = False
+) -> Circulant:
+    """Paper-faithful: first row drawn i.i.d. standard Gaussian (Sec. 6).
+
+    ``normalize=True`` rescales to unit spectral norm (an O(n) operation,
+    exact for circulants).  This leaves the recovery problem equivalent but
+    conditions ISTA's step size to tau ~= 1 — the baseline experiments use
+    the raw paper scaling, the optimized path normalizes (EXPERIMENTS.md
+    §Perf records both).
+    """
+    row = jax.random.normal(key, (n,), dtype=dtype)
+    c = Circulant.from_first_row(row)
+    if normalize:
+        c = Circulant.from_first_col(c.col / c.operator_norm())
+    return c
+
+
+def romberg_circulant(key: Array, n: int, dtype=jnp.float32) -> Circulant:
+    """Beyond-paper: random-convolution sensing (Romberg, SIAM J. Imaging 2009
+    — the paper's ref [22]).  Unit-magnitude spectrum with random phase makes
+    C orthogonal (C^T C = I), which (a) conditions ISTA perfectly — the safe
+    step tau is 1 instead of 1/max|spec|^2, and (b) makes the CPADMM inner
+    inverse trivially well-conditioned.  Measurably fewer iterations for the
+    same recovery MSE (see benchmarks/bench_ista_recovery.py).
+    """
+    nfreq = n // 2 + 1
+    phase = jax.random.uniform(key, (nfreq,), dtype=dtype) * (2 * jnp.pi)
+    spec = jnp.exp(1j * phase.astype(jnp.complex64 if dtype == jnp.float32 else jnp.complex128))
+    # DC and (for even n) Nyquist bins must be real for a real time-domain row.
+    spec = spec.at[0].set(1.0)
+    if n % 2 == 0:
+        spec = spec.at[-1].set(1.0)
+    col = _irfft(spec, n)  # |spec| == 1 => C^T C = I, ||C||_2 = 1
+    return Circulant.from_first_col(col.astype(dtype))
+
+
+def random_omega(key: Array, n: int, m: int) -> Array:
+    """Random m-subset of {0..n-1} (the P matrix diagonal support)."""
+    return jnp.sort(jax.random.permutation(key, n)[:m]).astype(jnp.int32)
+
+
+def partial_gaussian_circulant(
+    key: Array, n: int, m: int, dtype=jnp.float32, normalize: bool = False
+) -> PartialCirculant:
+    kc, ko = jax.random.split(key)
+    return PartialCirculant(
+        gaussian_circulant(kc, n, dtype, normalize=normalize), random_omega(ko, n, m)
+    )
+
+
+def partial_romberg_circulant(
+    key: Array, n: int, m: int, dtype=jnp.float32
+) -> PartialCirculant:
+    kc, ko = jax.random.split(key)
+    return PartialCirculant(romberg_circulant(kc, n, dtype), random_omega(ko, n, m))
+
+
+# ---------------------------------------------------------------------------
+# Blur composition (paper Sec. 7)
+# ---------------------------------------------------------------------------
+
+
+def moving_average_blur(n: int, order: int, dtype=jnp.float32) -> Circulant:
+    """Order-L blur: first row = [1/L]*L then zeros, right-circulated (Sec. 7)."""
+    row = jnp.zeros((n,), dtype).at[:order].set(1.0 / order)
+    return Circulant.from_first_row(row)
+
+
+def compose_sensing_blur(sense: Circulant, blur: Circulant) -> Circulant:
+    """A = C @ B — still circulant (the key Sec. 7 observation)."""
+    return sense.compose(blur)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference operator (the PISTA / PADMM baseline of Secs. 5.3, 6)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DenseOperator:
+    """Explicitly materialized m-by-n sensing matrix: the circulant-agnostic
+    baseline (PISTA / PADMM).  Memory O(mn); matvec O(mn)."""
+
+    mat: Array  # (m, n)
+
+    def tree_flatten(self):
+        return (self.mat,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def m(self) -> int:
+        return self.mat.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.mat.shape[-1]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.m, self.n)
+
+    def matvec(self, x: Array) -> Array:
+        return jnp.einsum("mn,...n->...m", self.mat, x)
+
+    def rmatvec(self, y: Array) -> Array:
+        return jnp.einsum("mn,...m->...n", self.mat, y)
+
+    def operator_norm_bound(self) -> Array:
+        """A *guaranteed upper* bound on ||A||_2 (power iteration only gives a
+        lower bound, which would make tau unsafe): min of the Holder bound
+        sqrt(||A||_1 ||A||_inf) and the Frobenius norm."""
+        holder = jnp.sqrt(
+            jnp.max(jnp.sum(jnp.abs(self.mat), axis=0))
+            * jnp.max(jnp.sum(jnp.abs(self.mat), axis=1))
+        )
+        frob = jnp.linalg.norm(self.mat)
+        return jnp.minimum(holder, frob)
+
+    def to_dense(self) -> Array:
+        return self.mat
+
+
+def densify(op) -> DenseOperator:
+    """Materialize any structured operator (for baselines / oracles)."""
+    return DenseOperator(op.to_dense())

@@ -1,0 +1,68 @@
+"""Pallas-kernel-backed solver steps (TPU execution path).
+
+The solvers in ista.py/admm.py are written against pure-jnp circulant ops
+(XLA fuses them well, and on CPU interpret-mode Pallas would be pure
+overhead).  On TPU the hot loops swap in the kernels from repro.kernels via
+this module; `tests/test_kernel_backend.py` pins exact agreement between the
+two backends so the swap is always safe.
+
+Step math is identical to ista.ista_step / admm.cpadmm_step — only the
+execution substrate changes:
+  * direct circulant matvec      -> kernels.circulant_matvec (time domain)
+  * threshold + dual update      -> kernels.soft_threshold   (fused VPU)
+  * frequency-domain x-update    -> kernels.spectral_pointwise between rffts
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .admm import CpadmmConst, CpadmmParams, CpadmmState
+from .circulant import PartialCirculant
+from .ista import IstaParams, IstaState
+from repro.kernels.circulant_matvec.ops import circulant_matvec
+from repro.kernels.soft_threshold.ops import fused_admm_update, fused_ista_update
+from repro.kernels.spectral_pointwise.ops import spectral_update
+
+Array = jax.Array
+
+
+def ista_step_pallas(
+    op: PartialCirculant, y: Array, state: IstaState, p: IstaParams, *,
+    interpret: bool = True,
+) -> IstaState:
+    """CPISTA iteration on the kernel substrate (Algs. 7-8)."""
+    col = op.circ.col
+    cx = circulant_matvec(col, state.x, interpret=interpret)
+    r = y - jnp.take(cx, op.omega, axis=-1)
+    rt = jnp.zeros_like(state.x).at[..., op.omega].set(r)
+    grad = circulant_matvec(col, rt, transpose=True, interpret=interpret)
+    x_new = fused_ista_update(state.x, p.tau * grad, p.alpha * p.tau, interpret=interpret)
+    return IstaState(x=x_new, x_prev=state.x, t_mom=state.t_mom)
+
+
+def cpadmm_step_pallas(
+    op: PartialCirculant,
+    const: CpadmmConst,
+    state: CpadmmState,
+    p: CpadmmParams,
+    *,
+    interpret: bool = True,
+) -> CpadmmState:
+    """CPADMM iteration: spectral_pointwise x-update + fused threshold/dual."""
+    n = op.n
+    vm = jnp.fft.rfft(state.v + state.mu, axis=-1)
+    zn = jnp.fft.rfft(state.z - state.nu, axis=-1)
+    x_spec = spectral_update(
+        op.circ.spec, const.b_spec.astype(op.circ.spec.dtype), vm, zn,
+        p.rho, p.sigma, interpret=interpret,
+    )
+    x = jnp.fft.irfft(x_spec, n=n, axis=-1)
+
+    cx = circulant_matvec(op.circ.col, x, interpret=interpret)
+    v = const.d_diag * (const.Pty + p.rho * (cx - state.mu))
+
+    z, nu = fused_admm_update(x, state.nu, p.alpha / p.sigma, p.tau2, interpret=interpret)
+    mu = state.mu + p.tau1 * (v - cx)
+    return CpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)

@@ -1,0 +1,31 @@
+"""Soft-thresholding operator eta_gamma (paper Eq. 4).
+
+``eta_gamma(x) = sign(x) * max(|x| - gamma, 0)``
+
+The fused-update variants below mirror how the paper's GPU kernels fuse the
+threshold with the state update that produces its input (CPISTA Alg. 8,
+CPADMM Alg. 6) so the intermediate never round-trips through HBM.  The
+Pallas TPU kernel lives in ``repro.kernels.soft_threshold``; these are the
+pure-jnp definitions used by the solvers and as kernel oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def soft_threshold(x: Array, gamma) -> Array:
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - gamma, 0.0)
+
+
+def ista_update(x_prev: Array, grad_step: Array, gamma) -> Array:
+    """eta_gamma(x_prev + grad_step) — CPISTA Alg. 8 fused tail."""
+    return soft_threshold(x_prev + grad_step, gamma)
+
+
+def admm_z_update(x: Array, nu: Array, gamma) -> Array:
+    """z = eta_gamma(x + nu) — CPADMM Alg. 6 / dense ADMM Alg. 2 line 5."""
+    return soft_threshold(x + nu, gamma)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: banded circulant matvec (circular FIR / blur apply).
+
+The Sec. 7 blur matrix is an order-L circulant (L ~ 5): only L of the n
+"sensing vector" entries are nonzero.  For such matrices the time-domain
+product is O(nL) — far below the O(n log n) FFT — and is a pure stencil:
+
+    y[i] = sum_{t=0}^{L-1} w[t] * x[(i + t) mod n]        (first-row taps)
+
+Each grid step owns a length-B output tile and DMAs the (B + L - 1)-element
+halo window of x; taps sit in SMEM-like small VMEM block.  The loop over L
+is unrolled (L is static and small) — each iteration is one shifted VPU
+multiply-add, the canonical TPU stencil pattern.
+
+This kernel is also the building block for the *distributed* blur apply:
+shard x over the model axis and the halo exchange is a 1-hop
+collective-permute of L - 1 elements (see repro/dist/fft.py notes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _kernel(xw_ref, taps_ref, o_ref, *, block: int, order: int):
+    i = pl.program_id(0)
+    window = xw_ref[pl.ds(i * block, block + order - 1)]
+    acc = jnp.zeros((block,), o_ref.dtype)
+    for t in range(order):  # static unroll: order is small (paper L = 5)
+        acc += taps_ref[t] * jax.lax.dynamic_slice_in_dim(window, t, block)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("order", "block", "interpret"))
+def banded_circulant_matvec(
+    taps: jax.Array,  # (order,) first-row taps w[0..L-1]
+    x: jax.Array,  # (n,)
+    *,
+    order: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """y[i] = sum_t taps[t] x[(i+t) mod n] — the paper's blur (A = first-row
+    circulant with taps [1/L]*L gives the Sec. 7 moving average)."""
+    n = x.shape[-1]
+    assert n % block == 0, (n, block)
+    assert taps.shape[-1] >= order
+    # circular halo: append the first (order-1) elements
+    xw = jnp.concatenate([x, x[: order - 1]]) if order > 1 else x
+    kern = functools.partial(_kernel, block=block, order=order)
+    return pl.pallas_call(
+        kern,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((xw.shape[0],), lambda i: 0),  # windowed source
+            pl.BlockSpec((taps.shape[0],), lambda i: 0),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: i),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(xw, taps)

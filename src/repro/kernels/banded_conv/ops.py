@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the banded circulant matvec (pads n to the block size)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK, banded_circulant_matvec
+from .ref import banded_circulant_matvec_ref
+
+
+@functools.partial(jax.jit, static_argnames=("order", "interpret"))
+def blur_apply(taps, x, *, order: int, interpret: bool = True):
+    """Apply an order-L first-row circulant (e.g. the Sec. 7 blur)."""
+    n = x.shape[-1]
+    if n % DEFAULT_BLOCK != 0:
+        # circular padding would change semantics; fall back to the oracle
+        return banded_circulant_matvec_ref(taps, x, order=order)
+    return banded_circulant_matvec(taps, x, order=order, interpret=interpret)

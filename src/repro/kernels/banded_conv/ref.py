@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the banded circulant (blur) matvec."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def banded_circulant_matvec_ref(taps, x, *, order: int):
+    """y[i] = sum_t taps[t] x[(i+t) mod n] via explicit rolls."""
+    y = jnp.zeros_like(x)
+    for t in range(order):
+        y = y + taps[t] * jnp.roll(x, -t, axis=-1)
+    return y

@@ -1,0 +1,48 @@
+"""Jit'd public wrapper for the circulant matvec kernel.
+
+Dispatch policy (recorded in EXPERIMENTS.md §Perf):
+  * n below ``FFT_CROSSOVER``: direct Pallas kernel — O(n^2) FLOPs but MXU-
+    dense and HBM-light (the paper's Fig. 7 regime where the structured
+    direct scheme beats generic GEMM).
+  * larger n: FFT path — O(n log n) wins regardless of constant factors.
+On this CPU container the Pallas kernel runs in interpret mode (slow,
+correctness only); `interpret=False` is the real-TPU configuration.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK, circulant_matvec_pallas
+from .ref import circulant_matvec_fft_ref
+
+FFT_CROSSOVER = 1 << 15
+
+
+def _pad_to_multiple(v, block):
+    n = v.shape[-1]
+    pad = (-n) % block
+    return (jnp.pad(v, (0, pad)), n) if pad else (v, n)
+
+
+@functools.partial(jax.jit, static_argnames=("transpose", "block", "interpret", "force"))
+def circulant_matvec(
+    col: jax.Array,
+    x: jax.Array,
+    *,
+    transpose: bool = False,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+    force: str | None = None,
+) -> jax.Array:
+    """y = C @ x, C[i, j] = col[(i - j) mod n].  force in {None,'direct','fft'}."""
+    n = col.shape[-1]
+    use_direct = force == "direct" or (force is None and n < FFT_CROSSOVER and n % block == 0)
+    if use_direct:
+        return circulant_matvec_pallas(
+            col, x, transpose=transpose, block=block, interpret=interpret
+        )
+    return circulant_matvec_fft_ref(col, x, transpose=transpose)

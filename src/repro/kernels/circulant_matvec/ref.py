@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the direct circulant matvec kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def circulant_dense(col: Array) -> Array:
+    n = col.shape[-1]
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return col[(i - j) % n]
+
+
+def circulant_matvec_ref(col: Array, x: Array, *, transpose: bool = False) -> Array:
+    """O(n^2) dense oracle: y = C @ x with C[i, j] = col[(i - j) mod n]."""
+    C = circulant_dense(col)
+    if transpose:
+        C = C.T
+    return C @ x
+
+
+def circulant_matvec_fft_ref(col: Array, x: Array, *, transpose: bool = False) -> Array:
+    """O(n log n) FFT oracle (the convolution-theorem path)."""
+    n = col.shape[-1]
+    spec = jnp.fft.rfft(col)
+    if transpose:
+        spec = jnp.conj(spec)
+    return jnp.fft.irfft(spec * jnp.fft.rfft(x), n=n)

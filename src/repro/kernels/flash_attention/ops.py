@@ -1,0 +1,49 @@
+"""Public wrapper: (B, S, H, D) GQA layout -> folded-head flash kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLK_K, DEFAULT_BLK_Q, flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KH, D)
+    v: jax.Array,  # (B, Sk, KH, D)
+    *,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """GQA-aware wrapper: repeats KV heads to match H, folds (B, H) into the
+    kernel grid.  Pads Sq/Sk to the block size (masked by causality or
+    discarded)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+
+    blk_q = min(DEFAULT_BLK_Q, sq) if sq % DEFAULT_BLK_Q else DEFAULT_BLK_Q
+    blk_k = min(DEFAULT_BLK_K, k.shape[1]) if k.shape[1] % DEFAULT_BLK_K else DEFAULT_BLK_K
+    assert sq % blk_q == 0 and k.shape[1] % blk_k == 0, "pad upstream"
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, blk_q=blk_q, blk_k=blk_k, interpret=interpret
+    )
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def flash_hbm_bytes(b, sq, sk, h, d, bytes_per_el=2) -> int:
+    """Analytic HBM traffic of the fused kernel (q+k+v reads + out write) —
+    used by the roofline accounting when the kernel replaces the pure-JAX
+    attention (EXPERIMENTS.md §Perf)."""
+    return bytes_per_el * (b * h * (sq * d * 2 + sk * d * 2))

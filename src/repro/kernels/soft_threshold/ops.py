@@ -1,0 +1,36 @@
+"""Jit'd wrappers (pad-to-block + reshape) for the soft-threshold kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import (
+    DEFAULT_BLOCK,
+    admm_threshold_dual_update,
+    ista_threshold_update,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_ista_update(x, delta, gamma, *, interpret: bool = True):
+    n = x.shape[-1]
+    pad = (-n) % DEFAULT_BLOCK
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        delta = jnp.pad(delta, (0, pad))
+    out = ista_threshold_update(x, delta, gamma, interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_admm_update(x, nu, gamma, tau2, *, interpret: bool = True):
+    n = x.shape[-1]
+    pad = (-n) % DEFAULT_BLOCK
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        nu = jnp.pad(nu, (0, pad))
+    z, nu_new = admm_threshold_dual_update(x, nu, gamma, tau2, interpret=interpret)
+    return z[:n], nu_new[:n]

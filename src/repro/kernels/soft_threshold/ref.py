@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused soft-threshold kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def eta_ref(v, gamma):
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - gamma, 0.0)
+
+
+def ista_threshold_update_ref(x, delta, gamma):
+    return eta_ref(x + delta, gamma)
+
+
+def admm_threshold_dual_update_ref(x, nu, gamma, tau2):
+    z = eta_ref(x + nu, gamma)
+    return z, nu + tau2 * (x - z)

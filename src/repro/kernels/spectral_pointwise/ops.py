@@ -1,0 +1,28 @@
+"""Jit'd wrapper: complex <-> (real, imag) plane plumbing around the kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cpadmm_spectral_update
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spectral_update(c_spec, b_spec, vm_spec, zn_spec, rho, sigma, *, interpret=True):
+    """Complex-typed public API; internally runs the plane-split Pallas kernel."""
+    xr, xi = cpadmm_spectral_update(
+        jnp.real(c_spec),
+        jnp.imag(c_spec),
+        jnp.real(b_spec).astype(jnp.real(c_spec).dtype),
+        jnp.real(vm_spec),
+        jnp.imag(vm_spec),
+        jnp.real(zn_spec),
+        jnp.imag(zn_spec),
+        rho,
+        sigma,
+        interpret=interpret,
+    )
+    return jax.lax.complex(xr, xi)

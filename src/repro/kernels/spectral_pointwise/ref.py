@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused CPADMM spectral update."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cpadmm_spectral_update_ref(c_spec, b_spec, vm_spec, zn_spec, rho, sigma):
+    """Complex-typed reference: X = b * (rho * conj(c) * VM + sigma * ZN)."""
+    return b_spec * (rho * jnp.conj(c_spec) * vm_spec + sigma * zn_spec)

@@ -1,0 +1,139 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run + roofline for the paper's own workload on the production mesh.
+
+Lowers one CPADMM iteration-block (50 iterations, as the recovery launcher
+runs it) for a large signal sharded over the model axis, with a batch of
+signals over (pod) x data — the cluster-job form of the paper's Sec. 7
+deblurring.  Compares the paper-faithful 6-transform iteration against the
+fused 3-transform variant (dist/recovery.py) — this is the §Perf hillclimb
+cell for the paper's technique.
+
+    PYTHONPATH=src python -m repro.launch.cs_dryrun [--n1 4096 --n2 4096]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.recovery import (
+    DistCpadmmParams,
+    DistCpadmmState,
+    dist_cpadmm_step,
+    dist_cpadmm_step_fused,
+)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, WIRE_MULT
+
+SDS = jax.ShapeDtypeStruct
+
+
+def lower_variant(mesh, n1, n2, batch, iters, fused, axis_name="model"):
+    step = dist_cpadmm_step_fused if fused else dist_cpadmm_step
+    row = P(None, axis_name, None)  # (batch, n1, n2) rows sharded
+    col = P(None, None, axis_name)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    row_b = P(dp, axis_name, None)
+    col_b = P(dp, None, axis_name)
+
+    def block(spec, b_spec, d_diag, pty, state):
+        p = DistCpadmmParams(*(jnp.float32(v) for v in (1e-4, 0.01, 0.01, 1.0, 1.0)))
+
+        def body(s, _):
+            return step(spec, b_spec, d_diag, pty, s, p, axis_name), None
+
+        state, _ = jax.lax.scan(body, state, None, length=iters)
+        return state
+
+    sm = shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(col_b, col_b, row_b, row_b, DistCpadmmState(*(row_b,) * 5)),
+        out_specs=DistCpadmmState(*(row_b,) * 5),
+        check_vma=False,
+    )
+    spec_s = SDS((batch, n1, n2), jnp.complex64)
+    real_s = SDS((batch, n1, n2), jnp.float32)
+    state_s = DistCpadmmState(*(real_s,) * 5)
+    in_sh = jax.tree.map(
+        lambda s: None, (spec_s, spec_s, real_s, real_s, state_s)
+    )  # shardings come from shard_map specs
+    jitted = jax.jit(sm)
+    lowered = jitted.lower(spec_s, spec_s, real_s, real_s, state_s)
+    compiled = lowered.compile()
+    return compiled
+
+
+def analyze(compiled, iters):
+    hlo = compiled.as_text()
+    c = analyze_hlo(hlo)
+    wire = sum(WIRE_MULT.get(op, 1.0) * b for op, b in c.collective_bytes.items())
+    return {
+        "flops_per_dev": c.flops,
+        "bytes_per_dev": c.bytes,
+        "collective_bytes_per_dev": c.collective_bytes,
+        "collective_counts": {k: v for k, v in c.collective_counts.items()},
+        "compute_s": c.flops / PEAK_FLOPS,
+        "memory_s": c.bytes / HBM_BW,
+        "collective_s": wire / ICI_BW,
+        "per_iter_a2a": c.collective_counts.get("all-to-all", 0) / iters,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n1", type=int, default=4096)
+    ap.add_argument("--n2", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="artifacts/cs_dryrun.json")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    results = {}
+    for fused in (False, True):
+        tag = "fused" if fused else "baseline"
+        t0 = time.time()
+        compiled = lower_variant(mesh, args.n1, args.n2, args.batch, args.iters, fused)
+        res = analyze(compiled, args.iters)
+        mem = compiled.memory_analysis()
+        res["hbm_need_gb"] = (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        ) / 1e9
+        res["compile_s"] = round(time.time() - t0, 1)
+        results[tag] = res
+        dom = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: res[k]
+        )
+        print(
+            f"{tag:9s} n={args.n1*args.n2} batch={args.batch}: "
+            f"compute {res['compute_s']*1e3:.1f}ms  memory {res['memory_s']*1e3:.1f}ms  "
+            f"collective {res['collective_s']*1e3:.1f}ms  bound={dom}  "
+            f"a2a/iter={res['per_iter_a2a']:.1f}  HBM {res['hbm_need_gb']:.1f}GB"
+        )
+    b, f = results["baseline"], results["fused"]
+    print(
+        f"fused vs baseline: collective {b['collective_s']/max(f['collective_s'],1e-12):.2f}x down, "
+        f"flops {b['flops_per_dev']/max(f['flops_per_dev'],1):.2f}x down, "
+        f"bytes {b['bytes_per_dev']/max(f['bytes_per_dev'],1):.2f}x down"
+    )
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    json.dump(
+        {"n1": args.n1, "n2": args.n2, "batch": args.batch,
+         "mesh": "multipod" if args.multipod else "single", **results},
+        open(args.out, "w"), indent=1,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,498 @@
+"""Static analyzer over optimized HLO text: per-device FLOPs, HBM traffic,
+and collective bytes — *with while-loop trip counts applied*.
+
+Why not ``compiled.cost_analysis()``: XLA's entry-computation cost analysis
+counts a ``while`` body exactly once, but our production steps keep the HLO
+small by scanning over layers / KV chunks / loss chunks, so >95% of the real
+work lives inside while bodies.  This walker:
+
+  * splits the HLO module into computations,
+  * tracks instruction result shapes (params from signatures, defs inline),
+  * counts dot FLOPs from output shape x contracting dims, fft FLOPs as
+    5 n log2 n, elementwise/reduce FLOPs as output sizes,
+  * estimates HBM bytes at *fusion granularity* (operands + results of each
+    top-level instruction; inside-fusion temporaries are free, matching how
+    TPUs stream VMEM),
+  * recurses into called computations (fusions only contribute their dots),
+  * multiplies while bodies by the trip count recovered from the loop
+    condition (canonical ``compare(iv, K), direction=LT`` pattern),
+  * sums collective payload bytes by op kind with the same multipliers.
+
+Everything is per-device: the module analyzed is the post-GSPMD partitioned
+program, which is exactly the per-chip view the roofline needs.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "c64": 8, "c128": 16,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shape(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """'(f32[2,3], bf16[4])' or 'f32[2,3]' -> [(dtype, dims), ...]."""
+    out = []
+    for m in SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _numel(shapes) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0.0) + v * mult
+
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+@dataclass
+class Instruction:
+    name: str
+    result: str  # shape text
+    op: str
+    body: str  # full line
+
+
+@dataclass
+class Computation:
+    name: str
+    param_shapes: Dict[str, str]
+    instructions: List[Instruction]
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+# result shape is either a tuple "(...)" (no nested parens; may contain
+# /*index=N*/ comments) or a single "dtype[dims]{layout}" token
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[\w\[\]\{\},]+))\s+([\w\-]+)\("
+)
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            stripped = line.strip()
+            m = _COMP_HEADER.match(stripped)
+            if m and stripped.endswith("{"):
+                name = m.group(1)
+                # params: "name: shape" pairs; shapes may be nested tuples, but
+                # per-param shapes are recovered from the parameter()
+                # instructions inside the body, so the signature is advisory.
+                params = {}
+                for pm in re.finditer(r"%?([\w.\-]+):\s*([\w\[\],{}]+)", stripped):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(name=name, param_shapes=params, instructions=[])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            nm, result, op = m.groups()
+            cur.instructions.append(Instruction(nm, result, op, line))
+    return comps
+
+
+def _called_comps(body: str) -> List[str]:
+    names = []
+    for key in ("to_apply=", "body=", "condition=", "branch_computations={",
+                "called_computations={", "calls="):
+        idx = body.find(key)
+        if idx < 0:
+            continue
+        seg = body[idx + len(key):]
+        if seg.startswith("{"):
+            seg = seg[1 : seg.find("}")]
+        else:
+            seg = seg.split(",")[0].split(" ")[0]
+        for tok in seg.split(","):
+            tok = tok.strip().lstrip("%")
+            if tok:
+                names.append(tok)
+    return names
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> Optional[int]:
+    """Recover K from the canonical 'compare(iv, K), direction=LT' pattern.
+
+    The compare may be fused: follow one level of fusion, mapping the fused
+    computation's parameters back to the call-site operands.
+    """
+    consts = {}
+    for ins in cond.instructions:
+        m = re.search(r"=\s*[su]\d+\[\]\s*constant\((\-?\d+)\)", ins.body)
+        if m:
+            consts[ins.name] = int(m.group(1))
+
+    def from_compare(body: str, operand_consts: List[Optional[int]]):
+        dm = re.search(r"direction=(\w+)", body)
+        if not dm:
+            return None
+        if dm.group(1) == "LT" and operand_consts[-1] is not None:
+            return operand_consts[-1]
+        if dm.group(1) == "GT" and operand_consts[0] is not None:
+            return operand_consts[0]
+        return None
+
+    for ins in cond.instructions:
+        if ins.op == "compare":
+            m = re.search(r"compare\(([^)]*)\)", ins.body)
+            if not m:
+                continue
+            args = [a.strip().split(" ")[-1].lstrip("%") for a in m.group(1).split(",")]
+            got = from_compare(ins.body, [consts.get(a) for a in args])
+            if got:
+                return got
+        if ins.op == "fusion":
+            called = _called_comps(ins.body)
+            m = re.search(r"fusion\(([^)]*)\)", ins.body)
+            if not (called and m):
+                continue
+            args = [a.strip().split(" ")[-1].lstrip("%") for a in m.group(1).split(",")]
+            arg_consts = [consts.get(a) for a in args]
+            for cn in called:
+                inner = comps.get(cn)
+                if inner is None:
+                    continue
+                for iins in inner.instructions:
+                    if iins.op == "compare":
+                        got = from_compare(iins.body, arg_consts)
+                        if got:
+                            return got
+    # fallback: a single scalar integer constant in the condition is the bound
+    if len(consts) == 1:
+        (v,) = consts.values()
+        if v > 0:
+            return v
+    return None
+
+
+_LAYOUT_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "broadcast", "reshape", "transpose",
+}
+_CHEAP_OPS = _LAYOUT_OPS | {"slice", "dynamic-slice", "dynamic-update-slice",
+                            "concatenate", "pad", "reverse", "gather", "scatter",
+                            "select", "compare", "convert", "reduce", "sort", "while",
+                            "conditional", "call", "custom-call", "fusion", "dot",
+                            "fft", "rng", "rng-bit-generator", "map",
+                            "all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute", "select-and-scatter",
+                            "reduce-window", "convolution", "cholesky",
+                            "triangular-solve", "optimization-barrier",
+                            "get-dimension-size", "send", "recv", "send-done",
+                            "recv-done", "infeed", "outfeed", "domain"}
+
+
+def _dot_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    out = _parse_shape(ins.result)
+    out_elems = _numel(out)
+    m = re.search(r"dot\(([^)]*)\)", ins.body)
+    lhs_contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.body)
+    if not (m and lhs_contract):
+        return 2.0 * out_elems  # degenerate
+    lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
+    # operand text may be "f32[a,b] %name" or "%name"
+    lhs_name = lhs_name.split(" ")[-1].lstrip("%")
+    lhs_shape_text = shapes.get(lhs_name, "")
+    lhs = _parse_shape(lhs_shape_text)
+    if not lhs:
+        # shape may be inline in the operand text
+        inline = _parse_shape(m.group(1).split(",")[0])
+        lhs = inline
+    k = 1
+    if lhs:
+        dims = lhs[0][1]
+        for ci in lhs_contract.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _fft_flops(ins: Instruction) -> float:
+    out = _parse_shape(ins.result)
+    n = _numel(out)
+    length = re.search(r"fft_length=\{([\d,]*)\}", ins.body)
+    l = 1
+    if length:
+        for d in length.group(1).split(","):
+            if d:
+                l *= int(d)
+    batch = n / max(l, 1)
+    return 5.0 * batch * l * max(math.log2(max(l, 2)), 1.0)
+
+
+class HloAnalyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        self.entry = self._find_entry(hlo)
+        self._memo: Dict[str, Cost] = {}
+
+    def _find_entry(self, hlo: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+        return m.group(1) if m else next(iter(self.comps))
+
+    def _shapes_in(self, comp: Computation) -> Dict[str, str]:
+        shapes = dict(comp.param_shapes)
+        for ins in comp.instructions:
+            shapes[ins.name] = ins.result
+            if ins.op == "parameter":
+                shapes[ins.name] = ins.result
+        return shapes
+
+    def cost_of(self, comp_name: str, surface: bool = True) -> Cost:
+        """surface=True: count HBM traffic at this level (entry / while body);
+        surface=False: inside a fusion — only dots/ffts/transcendentals."""
+        memo_key = f"{comp_name}|{surface}"
+        if memo_key in self._memo:
+            return self._memo[memo_key]
+        comp = self.comps.get(comp_name)
+        cost = Cost()
+        if comp is None:
+            return cost
+        shapes = self._shapes_in(comp)
+        for ins in comp.instructions:
+            out_shapes = _parse_shape(ins.result)
+            out_bytes = _nbytes(out_shapes)
+            if ins.op == "dot":
+                cost.flops += _dot_flops(ins, shapes)
+                if surface:
+                    cost.bytes += out_bytes + self._operand_bytes(ins, shapes)
+            elif ins.op == "convolution":
+                cost.flops += 2.0 * _numel(out_shapes) * 128  # coarse; unused here
+                if surface:
+                    cost.bytes += out_bytes + self._operand_bytes(ins, shapes)
+            elif ins.op == "fft" or (ins.op == "custom-call" and "fft" in ins.body.lower()):
+                cost.flops += _fft_flops(ins)
+                if surface:
+                    cost.bytes += out_bytes + self._operand_bytes(ins, shapes)
+            elif ins.op == "fusion":
+                inner = Cost()
+                for cn in _called_comps(ins.body):
+                    inner.add(self.cost_of(cn, surface=False))
+                cost.add(inner)
+                if surface:
+                    cost.bytes += self._fusion_surface_bytes(ins, shapes, out_bytes)
+                # elementwise flops at fusion granularity ~ output size
+                cost.flops += _numel(out_shapes)
+            elif ins.op == "while":
+                body_names = _called_comps(ins.body)
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", ins.body)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.body)
+                body = bm.group(1) if bm else (body_names[0] if body_names else None)
+                cond = cm.group(1) if cm else None
+                trips = None
+                if cond and cond in self.comps:
+                    trips = _trip_count(self.comps[cond], self.comps)
+                trips = trips if trips and trips > 0 else 1
+                if body:
+                    cost.add(self.cost_of(body, surface=True), mult=trips)
+            elif ins.op == "conditional":
+                branch_costs = [self.cost_of(cn, surface=True) for cn in _called_comps(ins.body)]
+                if branch_costs:
+                    best = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+            elif ins.op in ("call", "custom-call", "map", "reduce", "sort",
+                            "select-and-scatter", "reduce-window", "scatter"):
+                for cn in _called_comps(ins.body):
+                    cost.add(self.cost_of(cn, surface=False))
+                if surface and ins.op != "call":
+                    cost.bytes += out_bytes + self._operand_bytes(ins, shapes)
+                if ins.op == "reduce":
+                    cost.flops += _numel(out_shapes)
+            elif ins.op in COLLECTIVES:
+                # payload = per-device result bytes (tuple-aware)
+                cost.collective_bytes[ins.op] = (
+                    cost.collective_bytes.get(ins.op, 0.0) + out_bytes
+                )
+                cost.collective_counts[ins.op] = (
+                    cost.collective_counts.get(ins.op, 0.0) + 1
+                )
+                if surface:
+                    cost.bytes += out_bytes
+            elif ins.op in ("exponential", "log", "tanh", "logistic", "rsqrt",
+                            "sqrt", "power", "sine", "cosine"):
+                cost.transcendentals += _numel(out_shapes)
+                cost.flops += _numel(out_shapes)
+                if surface:
+                    cost.bytes += out_bytes + self._operand_bytes(ins, shapes)
+            elif ins.op in ("slice", "dynamic-slice"):
+                # reads and writes only the slice region, NOT the source
+                if surface:
+                    cost.bytes += 2.0 * out_bytes
+            elif ins.op in ("dynamic-update-slice", "scatter"):
+                # in-place region update: traffic ~ the update payload, not
+                # the full destination (XLA aliases the buffer)
+                if surface:
+                    ops_b = self._operand_bytes_list(ins, shapes)
+                    small = sum(ops_b) - max(ops_b) if ops_b else 0.0
+                    cost.bytes += 2.0 * small
+            elif ins.op == "gather":
+                if surface:
+                    cost.bytes += 2.0 * out_bytes
+            elif ins.op in _LAYOUT_OPS:
+                pass  # free at this granularity
+            else:
+                # generic elementwise at top level
+                cost.flops += _numel(out_shapes)
+                if surface:
+                    cost.bytes += out_bytes + self._operand_bytes(ins, shapes)
+        self._memo[memo_key] = cost
+        return cost
+
+    def _operand_bytes_list(self, ins: Instruction, shapes: Dict[str, str]) -> List[float]:
+        m = re.search(r"\(([^)]*)\)", ins.body[ins.body.find("=") :])
+        if not m:
+            return []
+        out = []
+        for arg in m.group(1).split(","):
+            arg = arg.strip()
+            inline = _parse_shape(arg)
+            if inline and "[" in arg.split("%")[0]:
+                out.append(float(_nbytes(inline)))
+                continue
+            name = arg.lstrip("%").split(" ")[-1].lstrip("%")
+            if name in shapes:
+                out.append(float(_nbytes(_parse_shape(shapes[name]))))
+        return out
+
+    def _operand_bytes(self, ins: Instruction, shapes: Dict[str, str]) -> float:
+        return sum(self._operand_bytes_list(ins, shapes))
+
+    def _fusion_surface_bytes(
+        self, ins: Instruction, shapes: Dict[str, str], out_bytes: float
+    ) -> float:
+        """Fusion traffic with structure-aware discounts:
+
+        * a fused-body param consumed (possibly via convert/bitcast) only by a
+          (dynamic-)slice/gather is charged at the slice size — the
+          scan-over-stacked-layers read pattern;
+        * a fused-body param that is the *destination* of a
+          dynamic-update-slice, and the fusion output rooted in that DUS, are
+          charged at the update size — on TPU the stacked buffer aliases in
+          place (the scan ys-stash write pattern).
+        """
+        ops = self._operand_bytes_list(ins, shapes)
+        overrides: Dict[int, float] = {}
+        out_override = None
+        for cn in _called_comps(ins.body):
+            comp = self.comps.get(cn)
+            if comp is None:
+                continue
+            param_idx: Dict[str, int] = {}
+            defs: Dict[str, Tuple[str, str]] = {}  # name -> (op, first operand)
+            inner_shapes: Dict[str, str] = {}
+            for iins in comp.instructions:
+                inner_shapes[iins.name] = iins.result
+                if iins.op == "parameter":
+                    pm = re.search(r"parameter\((\d+)\)", iins.body)
+                    if pm:
+                        param_idx[iins.name] = int(pm.group(1))
+                am = re.search(rf"{iins.op}\(([^)]*)\)", iins.body)
+                first = (
+                    am.group(1).split(",")[0].strip().lstrip("%").split(" ")[-1].lstrip("%")
+                    if am
+                    else ""
+                )
+                defs[iins.name] = (iins.op, first)
+
+            def trace_to_param(name: str, hops: int = 3):
+                for _ in range(hops):
+                    if name in param_idx:
+                        return param_idx[name]
+                    op, first = defs.get(name, ("", ""))
+                    if op in ("convert", "bitcast", "copy", "reshape"):
+                        name = first
+                    else:
+                        return None
+                return param_idx.get(name)
+
+            for iins in comp.instructions:
+                if iins.op in ("dynamic-slice", "slice", "gather"):
+                    _, first = defs[iins.name]
+                    pi = trace_to_param(first)
+                    if pi is not None:
+                        sliced = float(_nbytes(_parse_shape(iins.result)))
+                        overrides[pi] = min(overrides.get(pi, sliced), sliced)
+                elif iins.op == "dynamic-update-slice":
+                    am = re.search(r"dynamic-update-slice\(([^)]*)\)", iins.body)
+                    if not am:
+                        continue
+                    arglist = [
+                        a.strip().split(" ")[-1].lstrip("%") for a in am.group(1).split(",")
+                    ]
+                    if len(arglist) < 2:
+                        continue
+                    dest, update = arglist[0], arglist[1]
+                    upd_bytes = float(_nbytes(_parse_shape(inner_shapes.get(update, ""))))
+                    pi = trace_to_param(dest)
+                    if pi is not None and upd_bytes:
+                        overrides[pi] = min(overrides.get(pi, upd_bytes), upd_bytes)
+                        out_override = upd_bytes  # in-place aliased write
+
+        total = 0.0
+        for i, b in enumerate(ops):
+            total += min(overrides.get(i, b), b)
+        total += out_override if out_override is not None else out_bytes
+        return total
+
+    def analyze(self) -> Cost:
+        return self.cost_of(self.entry, surface=True)
+
+
+def analyze_hlo(hlo: str) -> Cost:
+    return HloAnalyzer(hlo).analyze()

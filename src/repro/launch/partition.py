@@ -1,0 +1,196 @@
+"""Parameter / state / batch PartitionSpecs for the production meshes.
+
+Name-based rules over the param-tree paths: every leaf gets a PartitionSpec
+derived from what the tensor *is* (attention projection, expert weight,
+vocab table, ...), resolved against the active per-arch sharding rules
+(repro.dist.sharding.rules_for_arch handles non-divisible fallbacks).
+
+Conventions (leading ``L`` is the stacked-layer axis from segment scanning):
+    embed/table        (V, D)              vocab-sharded rows
+    attn wq/wk/wv      (L, D, H*hd)        TP on the head-flat output dim
+    attn wo            (L, H*hd, D)        TP on the head-flat input dim
+    mlp w_gate/up      (L, D, F)           TP on F
+    mlp w_down         (L, F, D)           TP on F
+    moe w_*            (L, E, D, F)        EP on E + FSDP on D (the 671B case)
+    mamba/xlstm projs  (L, D, K)           FSDP/TP on K when divisible
+Optimizer moments mirror their parameter's spec.  Batch: tokens shard over
+(pod, data); caches shard batch and kv-heads.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# (regex on path, logical axes for the trailing dims). Leading unmatched dims
+# (e.g. the stacked-layer axis) are replicated.  First match wins.
+PARAM_RULES = [
+    (r"embed/table$", ("vocab", None)),
+    (r"embed/unembed$", (None, "vocab")),
+    (r"attn/wq$", (None, "heads")),
+    (r"attn/wk$", (None, "kv_heads")),
+    (r"attn/wv$", (None, "kv_heads")),
+    (r"attn/wo$", ("heads", None)),
+    (r"attn/w_dq$", (None, None)),
+    (r"attn/w_uq$", (None, "heads")),
+    (r"attn/w_dkv$", (None, None)),
+    (r"attn/w_krope$", (None, None)),
+    (r"attn/w_uk$", (None, "heads")),
+    (r"attn/w_uv$", (None, "heads")),
+    (r"attn/w_q$", (None, "heads")),
+    (r"mlp/w_gate$", (None, "mlp")),
+    (r"mlp/w_up$", (None, "mlp")),
+    (r"mlp/w_down$", ("mlp", None)),
+    (r"shared/w_gate$", (None, "mlp")),
+    (r"shared/w_up$", (None, "mlp")),
+    (r"shared/w_down$", ("mlp", None)),
+    (r"moe/router$", (None, None)),
+    (r"moe/router_bias$", (None,)),
+    (r"moe/w_gate$", ("experts", "fsdp", None)),
+    (r"moe/w_up$", ("experts", "fsdp", None)),
+    (r"moe/w_down$", ("experts", None, "fsdp")),
+    (r"mamba/in_proj$", ("fsdp", None)),
+    (r"mamba/out_proj$", (None, "fsdp")),
+    (r"mamba/conv_[wb]$", None),  # tiny: replicate
+    (r"(mlstm|slstm)/w_(up|q|k|v|o|x|h)$", (None, "ssm_inner")),
+    (r"(mlstm|slstm)/w_down$", ("ssm_inner", None)),
+    (r"(mlstm|slstm)/w_[ifb]$", None),
+]
+
+
+def _resolve(logical: Optional[str], rules: Dict[str, Any], names: Tuple[str, ...]):
+    if logical is None:
+        return None
+    phys = rules.get(logical)
+    if phys is None:
+        return None
+    if isinstance(phys, tuple):
+        present = tuple(a for a in phys if a in names)
+        return present if len(present) > 1 else (present[0] if present else None)
+    return phys if phys in names else None
+
+
+def spec_for_param(path: str, ndim: int, rules, names) -> P:
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            if axes is None:
+                return P()
+            resolved = tuple(_resolve(a, rules, names) for a in axes)
+            lead = (None,) * (ndim - len(resolved))
+            return P(*(lead + resolved))
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_shardings(mesh: Mesh, params_shape, rules) -> Any:
+    """NamedSharding tree matching a params ShapeDtypeStruct tree."""
+    names = tuple(mesh.axis_names)
+
+    def leaf(path, leaf_shape):
+        spec = spec_for_param(_path_str(path), len(leaf_shape.shape), rules, names)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, tuple):
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axes, 1)
+
+
+def batch_shardings(mesh: Mesh, batch_shape, rules) -> Any:
+    """tokens (B, S): batch over (pod, data); embeds (B, N, D) likewise.
+
+    Batch dims that don't divide the DP extent (e.g. long_500k's batch=1)
+    stay replicated — correct, just without data parallelism for that cell."""
+    names = tuple(mesh.axis_names)
+    dp = _resolve("batch", rules, names)
+    dp_size = _axes_size(mesh, dp)
+
+    def leaf(leaf_shape):
+        nd = len(leaf_shape.shape)
+        b = leaf_shape.shape[0] if nd else 0
+        use_dp = dp if (nd and b % max(dp_size, 1) == 0) else None
+        return NamedSharding(mesh, P(*((use_dp,) + (None,) * (nd - 1))))
+
+    return jax.tree_util.tree_map(leaf, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, state_shape, rules) -> Any:
+    """DecodeState: shard the batch dim; KV head dim over model when present.
+
+    Cache layouts (leading L = stacked layer axis within a segment):
+        KVCache.k/v      (L, B, S, K, hd)
+        MLACache.c_kv    (L, B, S, R)
+        Mamba2Cache.*    (L, B, ...)
+        length           (L, B)
+        cross_kv         (B, S_enc, D)  (no leading L)
+    """
+    names = tuple(mesh.axis_names)
+    dp = _resolve("batch", rules, names)
+    kvh = _resolve("kv_heads", rules, names)
+    dp_size = _axes_size(mesh, dp)
+    kvh_size = _axes_size(mesh, kvh)
+
+    def leaf(path, leaf_shape):
+        nd = len(leaf_shape.shape)
+        shape = leaf_shape.shape
+        name = _path_str(path)
+
+        def dp_for(dim_idx):
+            return dp if shape[dim_idx] % max(dp_size, 1) == 0 else None
+
+        def kvh_for(dim_idx):
+            return kvh if shape[dim_idx] % max(kvh_size, 1) == 0 else None
+
+        if re.search(r"(^|/)(k|v)$", name) and nd == 5:  # stacked (L,B,S,K,hd)
+            return NamedSharding(mesh, P(None, dp_for(1), None, kvh_for(3), None))
+        if re.search(r"(^|/)(k|v)$", name) and nd == 4:  # shared block (B,S,K,hd)
+            return NamedSharding(mesh, P(dp_for(0), None, kvh_for(2), None))
+        if "cross_kv" in name and nd == 3:
+            return NamedSharding(mesh, P(dp_for(0), None, None))
+        if nd >= 2:
+            return NamedSharding(mesh, P(None, dp_for(1), *(None,) * (nd - 2)))
+        return NamedSharding(mesh, P(None))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_shape)
+
+
+def train_state_shardings(mesh: Mesh, state_shape, rules) -> Any:
+    """TrainState(params, opt(mu, nu, count), step): moments mirror params."""
+    names = tuple(mesh.axis_names)
+
+    def leaf(path, leaf_shape):
+        name = _path_str(path)
+        # strip TrainState/Adam prefixes so PARAM_RULES regexes match
+        stripped = re.sub(r"^(params|opt/mu|opt/nu)/", "", name)
+        if stripped in ("step", "count") or name.endswith(("/count", "step")):
+            return NamedSharding(mesh, P())
+        spec = spec_for_param(stripped, len(leaf_shape.shape), rules, names)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, state_shape)

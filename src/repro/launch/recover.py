@@ -1,0 +1,78 @@
+"""Production recovery launcher: batched CS recovery with checkpoint/restart.
+
+    PYTHONPATH=src python -m repro.launch.recover --n 65536 --batch 4 \
+        --method cpadmm --iters 600 --ckpt-dir artifacts/recover_ckpt
+
+Runs the paper's workload as a restartable job: a batch of compressively
+sensed signals is recovered with the selected solver, checkpointing solver
+state every chunk.  For within-signal model parallelism across a mesh see
+examples/distributed_recovery.py and repro.dist.recovery.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import RecoveryProblem, partial_gaussian_circulant, solve_checkpointed
+from repro.data.synthetic import paper_regime, sparse_signal
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--method", default="cpadmm",
+                    choices=["cpadmm", "ista", "fista"])
+    ap.add_argument("--iters", type=int, default=600)
+    ap.add_argument("--chunk", type=int, default=100)
+    ap.add_argument("--alpha", type=float, default=1e-4)
+    ap.add_argument("--ckpt-dir", default="artifacts/recover_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n = args.n
+    m, k = paper_regime(n)
+    print(f"recovering batch={args.batch} signals, n={n}, m={m}, k={k}, "
+          f"method={args.method}")
+
+    x_true = sparse_signal(jax.random.PRNGKey(args.seed), n, k, batch=(args.batch,))
+    op = partial_gaussian_circulant(jax.random.PRNGKey(args.seed + 1), n, m,
+                                    normalize=True)
+    prob = RecoveryProblem(op=op, y=op.matvec(x_true), x_true=x_true)
+
+    restore = None
+    latest = ckpt.latest_step(args.ckpt_dir)
+    if latest is not None:
+        # the saved tree is the solver state; rebuild shape via a fresh stepper
+        from repro.core.solvers import make_stepper
+
+        stepper = make_stepper(prob, args.method, alpha=args.alpha,
+                               rho=0.01, sigma=0.01)
+        shape = jax.eval_shape(stepper.init)
+        step_no, state = ckpt.restore(args.ckpt_dir, latest, shape)
+        restore = (step_no, state)
+        print(f"resumed from iteration {step_no}")
+
+    t0 = time.time()
+    x_hat, mse = solve_checkpointed(
+        prob,
+        args.method,
+        iters=args.iters,
+        chunk=args.chunk,
+        alpha=args.alpha,
+        rho=0.01,
+        sigma=0.01,
+        save_cb=lambda s, st: ckpt.save(args.ckpt_dir, s, jax.device_get(st)),
+        restore=restore,
+    )
+    print(f"finished in {time.time()-t0:.1f}s; per-signal MSE: "
+          f"{[f'{v:.2e}' for v in jnp.atleast_1d(mse)]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Roofline derivation from the dry-run artifacts (assignment §ROOFLINE).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    compute term    = flops_per_device / PEAK_FLOPS
+    memory term     = hbm_bytes_per_device / HBM_BW
+    collective term = wire_bytes_per_device / ICI_BW
+
+flops/bytes come from the trip-count-aware HLO walk (launch/hlo_analysis.py —
+XLA's own cost_analysis counts while bodies once, see that module's header).
+Wire bytes apply per-op multipliers for ring algorithms: all-reduce moves
+2(d-1)/d ~ 2x its payload, all-gather/reduce-scatter/all-to-all ~ 1x, with
+the result-shape payload parsed per op.  The multi-pod mesh discounts ICI
+bandwidth for nothing — cross-pod DCN is slower, so multipod collective
+terms are *lower bounds* (flagged in the table).
+
+    python -m repro.launch.roofline [--dir artifacts/dryrun] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+WIRE_MULT = {
+    "all-reduce": 2.0,  # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# tokens per cell for MODEL_FLOPS = 6 N D (D = tokens processed per step)
+from repro.configs.registry import SHAPES  # noqa: E402
+
+
+def model_flops(rec: dict) -> float:
+    seq, batch, kind = SHAPES[rec["shape"]]
+    n_active = rec["params"]["active"]
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * batch
+
+
+def derive(rec: dict) -> dict:
+    w = rec["hlo_walk"]
+    n_dev = rec["n_devices"]
+    compute_s = w["flops"] / PEAK_FLOPS
+    memory_s = w["bytes"] / HBM_BW
+    wire = sum(
+        WIRE_MULT.get(op, 1.0) * b for op, b in w["collective_bytes"].items()
+    )
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = w["flops"] * n_dev
+    mem = rec.get("memory_analysis", {})
+    hbm_need = (
+        mem.get("argument_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0)
+        + mem.get("output_size_in_bytes", 0)
+        - mem.get("alias_size_in_bytes", 0)
+    )
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind", "n_devices")},
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "step_s_bound": max(terms.values()),
+        "roofline_fraction": compute_s / max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "hbm_need_bytes": hbm_need,
+        "fits_16g": hbm_need <= 16e9,
+        "collective_detail": w["collective_bytes"],
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single", help="single|multipod|all")
+    ap.add_argument("--json-out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+
+    rows: List[dict] = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            rows.append({k: rec.get(k) for k in ("arch", "shape", "mesh")} | {"error": True})
+            continue
+        if args.mesh != "all" and rec["mesh"] != args.mesh:
+            continue
+        rows.append(derive(rec))
+
+    rows.sort(key=lambda r: (r.get("arch", ""), r.get("shape", "")))
+    os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    hdr = (
+        "| arch | shape | compute | memory | collective | bound | roofline frac "
+        "| useful (6ND/HLO) | HBM need/dev | fits 16G |"
+    )
+    print(hdr)
+    print("|" + "---|" * 10)
+    for r in rows:
+        if r.get("error"):
+            print(f"| {r['arch']} | {r['shape']} | ERROR |")
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['roofline_fraction']*100:.0f}% | "
+            f"{min(r['useful_ratio'],99):.2f} | {r['hbm_need_bytes']/1e9:.1f}GB | "
+            f"{'Y' if r['fits_16g'] else 'N'} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

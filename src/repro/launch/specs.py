@@ -1,0 +1,97 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation anywhere — the dry-run lowers against these shapes
+(assignment MULTI-POD DRY-RUN step 2).  Modality frontends are stubs per the
+assignment: whisper gets post-conv frame embeddings, pixtral gets patch
+embeddings, both as inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES
+from repro.models import lm, steps
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig
+
+SDS = jax.ShapeDtypeStruct
+
+WHISPER_TEXT_LEN = 448  # whisper's decoder horizon (teacher forcing)
+WHISPER_CROSS_LEN = 4096  # encoder memory length carried into decode cells
+
+
+def opt_config() -> AdamWConfig:
+    return AdamWConfig()
+
+
+def train_batch_specs(cfg: ModelConfig, seq_len: int, batch: int) -> Dict[str, Any]:
+    if cfg.is_encdec:
+        return {
+            "tokens": SDS((batch, WHISPER_TEXT_LEN + 1), jnp.int32),
+            "frames": SDS((batch, seq_len, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.n_img_tokens:
+        text = seq_len - cfg.n_img_tokens
+        return {
+            "tokens": SDS((batch, text + 1), jnp.int32),
+            "img_embeds": SDS((batch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": SDS((batch, seq_len + 1), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, seq_len: int, batch: int) -> Dict[str, Any]:
+    if cfg.is_encdec:
+        return {
+            "tokens": SDS((batch, WHISPER_TEXT_LEN), jnp.int32),
+            "frames": SDS((batch, seq_len, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.n_img_tokens:
+        return {
+            "tokens": SDS((batch, seq_len - cfg.n_img_tokens), jnp.int32),
+            "img_embeds": SDS((batch, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": SDS((batch, seq_len), jnp.int32)}
+
+
+def train_state_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: steps.init_train_state(jax.random.PRNGKey(0), cfg, opt_config())
+    )
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    if cfg.is_encdec:
+        ck = SDS((batch, WHISPER_CROSS_LEN, cfg.d_model), jnp.bfloat16)
+        return jax.eval_shape(
+            lambda c: lm.init_decode_state(cfg, batch, max_len, cross_kv=c), ck
+        )
+    return jax.eval_shape(lambda: lm.init_decode_state(cfg, batch, max_len))
+
+
+def cell_specs(cfg: ModelConfig, shape_name: str) -> Tuple[str, Callable, Tuple]:
+    """-> (step_kind, step_fn, arg-specs tuple for .lower())."""
+    seq_len, batch, kind = SHAPES[shape_name]
+    if kind == "train":
+        fn = steps.make_train_step(cfg, opt_config())
+        args = (train_state_specs(cfg), train_batch_specs(cfg, seq_len, batch))
+        return "train", fn, args
+    if kind == "prefill":
+        fn = steps.make_prefill_step(cfg)
+        args = (params_specs(cfg), prefill_batch_specs(cfg, seq_len, batch))
+        return "prefill", fn, args
+    # decode: one token against a seq_len-deep cache
+    fn = steps.make_decode_step(cfg)
+    args = (
+        params_specs(cfg),
+        SDS((batch, 1), jnp.int32),
+        decode_state_specs(cfg, batch, max_len=seq_len),
+    )
+    return "decode", fn, args

@@ -1,0 +1,437 @@
+"""Attention: GQA/MQA and MLA, with chunked online-softmax and KV-cache decode.
+
+Training/prefill attention streams KV in chunks with a running (max, sum)
+online softmax — flash-attention's algorithm expressed in pure JAX (lax.scan
+over KV chunks).  Peak memory is O(S * chunk) instead of O(S^2), which is
+what lets the 32k-prefill cells fit a 16 GiB chip (see EXPERIMENTS.md).
+
+Decode attends one query position against a fixed-size cache with a length
+mask — O(S) work per emitted token.
+
+MLA (DeepSeek-V3) keeps the paper-faithful formulation: latent c_kv (rank
+512) + shared RoPE key; the decode cache stores only (c_kv, k_rope) — the
+8x KV-cache shrink that makes the 32k-decode cell cheap.  The "absorbed"
+matmul variant is a §Perf hillclimb (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, init_norm, rmsnorm
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core chunked attention
+# ---------------------------------------------------------------------------
+
+
+def _attend_qtile(
+    qf: Array,  # (B, Tq, K, G, Dh) pre-scaled fp32
+    kc: Array,  # (B, nkv, Ck, K, Dh)
+    vc: Array,  # (B, nkv, Ck, K, Dv)
+    q_pos: Array,  # (Tq,) absolute positions of this q tile
+    *,
+    causal: bool,
+    sk: int,
+    chunk: int,
+    kv_valid_len: Optional[Array],
+    sliding_window: int,
+) -> Array:
+    """Online-softmax over KV chunks for one query tile (flash inner loop)."""
+    b, tq, kh, g, dh = qf.shape
+    dv = vc.shape[-1]
+
+    def body(carry, inputs):
+        m, l, acc, idx = carry
+        kb, vb = inputs  # (B, Ck, K, Dh/Dv)
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb.astype(jnp.float32))
+        mask = kv_pos[None, :] < sk  # padding mask, (Tq?, Ck) broadcast
+        mask = jnp.broadcast_to(mask, (tq, chunk))
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        if sliding_window:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - sliding_window)
+        if kv_valid_len is not None:
+            vmask = kv_pos[None, :] < kv_valid_len[:, None]  # (B, Ck)
+            s = jnp.where(vmask[:, None, None, None, :], s, NEG_INF)
+        s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((b, kh, g, tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, tq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, tq, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0, jnp.zeros((), jnp.int32)),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, Tq, K, G, Dv)
+
+
+def _attend_chunked(
+    q: Array,  # (B, Sq, H, Dh)
+    k: Array,  # (B, Sk, K, Dh)
+    v: Array,  # (B, Sk, K, Dv)
+    *,
+    causal: bool,
+    q_offset: int | Array = 0,
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+    kv_valid_len: Optional[Array] = None,  # (B,) valid cache length (decode)
+    sliding_window: int = 0,
+) -> Array:
+    """Flash-style attention: scan over query tiles x KV chunks.
+
+    Peak live score tile is (B, K, G, q_chunk, chunk) fp32 — independent of
+    Sq and Sk, which is what lets the 32k cells fit (EXPERIMENTS.md §Dry-run).
+    GQA: H = G * K.
+    """
+    b, sq, h, dh = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kh
+    scale = scale if scale is not None else dh**-0.5
+    qf = (q * scale).astype(jnp.float32).reshape(b, sq, kh, g, dh)
+
+    n_kv = max(1, (sk + chunk - 1) // chunk)
+    pad_kv = n_kv * chunk - sk
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_kv, chunk, kh, dh)
+    vc = v.reshape(b, n_kv, chunk, kh, dv)
+
+    q_chunk = min(chunk, sq) if sq >= chunk else sq
+    n_q = max(1, (sq + q_chunk - 1) // q_chunk)
+    pad_q = n_q * q_chunk - sq
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    qt = qf.reshape(b, n_q, q_chunk, kh, g, dh)
+    q_pos0 = jnp.asarray(q_offset)
+
+    def q_body(_, inp):
+        q_tile, qi = inp
+        q_pos = q_pos0 + qi * q_chunk + jnp.arange(q_chunk)
+        out = _attend_qtile(
+            q_tile, kc, vc, q_pos,
+            causal=causal, sk=sk, chunk=chunk,
+            kv_valid_len=kv_valid_len, sliding_window=sliding_window,
+        )
+        return None, out
+
+    q_body_fn = jax.checkpoint(q_body) if n_q > 1 else q_body
+    _, outs = jax.lax.scan(
+        q_body_fn, None, (qt.swapaxes(0, 1), jnp.arange(n_q))
+    )  # (n_q, B, q_chunk, K, G, Dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, n_q * q_chunk, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, S_max, K, Dh)
+    v: Array  # (B, S_max, K, Dv)
+    length: Array  # (B,) int32 — filled positions
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def gqa_forward(
+    params: dict,
+    cfg: ModelConfig,
+    x: Array,  # (B, S, D)
+    positions: Array,  # (B, S)
+    *,
+    causal: bool = True,
+    rope: bool = True,
+    kv: Optional[Tuple[Array, Array]] = None,  # cross-attention K/V source
+) -> Array:
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if kv is None:
+        k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        src = kv[0]
+        sk = src.shape[1]
+        k = jnp.einsum("bsd,dh->bsh", src, params["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dh->bsh", src, params["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    out = _attend_chunked(
+        q, k, v, causal=causal, chunk=cfg.attn_chunk, sliding_window=cfg.sliding_window
+    )
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return constrain(y, "batch", None, "embed")  # bf16 TP reduce (see layers.mlp)
+
+
+def gqa_decode(
+    params: dict,
+    cfg: ModelConfig,
+    x: Array,  # (B, 1, D)
+    cache: KVCache,
+    *,
+    rope: bool = True,
+) -> Tuple[Array, KVCache]:
+    b, s, d = x.shape
+    assert s == 1
+    hd = cfg.resolved_head_dim
+    pos = cache.length[:, None]  # (B, 1)
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    if rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    k_new = jax.vmap(lambda ck, kn, i: jax.lax.dynamic_update_slice(ck, kn, (i, 0, 0)))(
+        cache.k, k.astype(cache.k.dtype), cache.length
+    )
+    v_new = jax.vmap(lambda cv, vn, i: jax.lax.dynamic_update_slice(cv, vn, (i, 0, 0)))(
+        cache.v, v.astype(cache.v.dtype), cache.length
+    )
+    out = _attend_chunked(
+        q,
+        k_new,
+        v_new,
+        causal=False,  # masking via kv_valid_len
+        chunk=cfg.attn_chunk,
+        kv_valid_len=cache.length + 1,
+        sliding_window=cfg.sliding_window,
+    )
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return y, KVCache(k=k_new, v=v_new, length=cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], d, cfg.kv_lora_rank, dtype),  # latent down
+        "w_krope": dense_init(ks[1], d, dr, dtype),  # shared rope key
+        "kv_norm": init_norm(cfg.kv_lora_rank, dtype),
+        "w_uk": dense_init(ks[2], cfg.kv_lora_rank, h * dn, dtype),
+        "w_uv": dense_init(ks[3], cfg.kv_lora_rank, h * dv, dtype),
+        "wo": dense_init(ks[4], h * dv, d, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], d, cfg.q_lora_rank, dtype)
+        p["q_norm"] = init_norm(cfg.q_lora_rank, dtype)
+        p["w_uq"] = dense_init(ks[6], cfg.q_lora_rank, h * (dn + dr), dtype)
+    else:
+        p["w_q"] = dense_init(ks[7], d, h * (dn + dr), dtype)
+    return p
+
+
+class MLACache(NamedTuple):
+    c_kv: Array  # (B, S_max, kv_lora_rank) — the compressed latent
+    k_rope: Array  # (B, S_max, rope_head_dim)
+    length: Array  # (B,)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _mla_q(params, cfg, x, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+        cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rh->bsh", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, params["w_q"])
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,dn+dr)
+
+
+def _mla_kv_from_latent(params, cfg, c_kv, k_rope):
+    """Expand latent to per-head K (nope||rope) and V."""
+    b, sk, _ = c_kv.shape
+    h, dn, dv = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim
+    k_nope = jnp.einsum("bsr,rh->bsh", c_kv, params["w_uk"]).reshape(b, sk, h, dn)
+    v = jnp.einsum("bsr,rh->bsh", c_kv, params["w_uv"]).reshape(b, sk, h, dv)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, sk, h, cfg.rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_forward(params: dict, cfg: ModelConfig, x: Array, positions: Array) -> Array:
+    b, s, d = x.shape
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q = _mla_q(params, cfg, x, positions)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_krope"])[:, :, None, :], positions,
+        cfg.rope_theta,
+    )[:, :, 0, :]
+    k, v = _mla_kv_from_latent(params, cfg, c_kv, k_rope)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    out = _attend_chunked(
+        q, k, v, causal=True, chunk=cfg.attn_chunk, scale=(dn + dr) ** -0.5
+    )
+    out = out.reshape(b, s, cfg.n_heads * dv)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return constrain(y, "batch", None, "embed")  # bf16 TP reduce (see layers.mlp)
+
+
+def mla_decode_absorbed(
+    params: dict, cfg: ModelConfig, x: Array, cache: MLACache
+) -> Tuple[Array, MLACache]:
+    """Beyond-paper(arch) decode: DeepSeek's weight-absorption trick.
+
+    The naive decode expands the latent cache to per-head K/V of shape
+    (B, S, H, dn + dv) every step — at 32k cache that is a ~200 GB
+    materialization *per token* (EXPERIMENTS.md §Perf).  Absorption folds
+    W_uk into the query and W_uv into the output projection so attention
+    runs directly in the rank-512 latent space:
+
+        scores = (q_nope W_uk) . c_kv + q_rope . k_rope      (B,H,S)
+        out    = softmax(scores) . c_kv                      (B,H,R)
+        y      = out W_uv W_o   (materialized per head)
+
+    No S x H tensor is ever built; per-step traffic ~ the latent cache
+    itself.  Exact same math (tested vs mla_decode to fp tolerance).
+    """
+    b, s, d = x.shape
+    assert s == 1
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    pos = cache.length[:, None]
+    q = _mla_q(params, cfg, x, pos)  # (B,1,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    # append this step's latent to the cache (identical to naive path)
+    c_new = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_new = rmsnorm(params["kv_norm"], c_new, cfg.norm_eps)
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_krope"])[:, :, None, :], pos,
+        cfg.rope_theta,
+    )[:, :, 0, :]
+    c_kv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), cache.length
+    )
+    k_rope = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), cache.length
+    )
+
+    # absorb W_uk into q: q_lat[b,h,r] = sum_dn q_nope[b,h,dn] W_uk[r, h*dn]
+    w_uk = params["w_uk"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, c_kv.astype(jnp.float32))
+        + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) * scale
+    valid = jnp.arange(c_kv.shape[1])[None, None, :] < (cache.length + 1)[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", w, c_kv.astype(jnp.float32))  # (B,H,R)
+
+    # absorb W_uv then the output projection
+    w_uv = params["w_uv"].reshape(r, h, dv)
+    out_v = jnp.einsum("bhr,rhv->bhv", out_lat, w_uv.astype(jnp.float32))
+    out_v = out_v.reshape(b, 1, h * dv).astype(x.dtype)
+    y = jnp.einsum("bsh,hd->bsd", out_v, params["wo"])
+    return y, MLACache(c_kv=c_kv, k_rope=k_rope, length=cache.length + 1)
+
+
+def mla_decode(
+    params: dict, cfg: ModelConfig, x: Array, cache: MLACache
+) -> Tuple[Array, MLACache]:
+    b, s, d = x.shape
+    assert s == 1
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    pos = cache.length[:, None]
+    q = _mla_q(params, cfg, x, pos)  # (B,1,H,dn+dr)
+    c_new = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_new = rmsnorm(params["kv_norm"], c_new, cfg.norm_eps)
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_krope"])[:, :, None, :], pos,
+        cfg.rope_theta,
+    )[:, :, 0, :]
+    c_kv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), cache.length
+    )
+    k_rope = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), cache.length
+    )
+    k, v = _mla_kv_from_latent(params, cfg, c_kv, k_rope)
+    out = _attend_chunked(
+        q,
+        k,
+        v,
+        causal=False,
+        chunk=cfg.attn_chunk,
+        scale=(dn + dr) ** -0.5,
+        kv_valid_len=cache.length + 1,
+    )
+    out = out.reshape(b, 1, cfg.n_heads * dv)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return y, MLACache(c_kv=c_kv, k_rope=k_rope, length=cache.length + 1)

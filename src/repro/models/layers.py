@@ -1,0 +1,149 @@
+"""Foundational layers: norms, RoPE, embeddings, GLU MLPs, initializers.
+
+Functional style throughout: ``init_*`` builds a param dict, ``apply``-style
+functions are pure.  Sharding is expressed with logical-axis constraints via
+``repro.dist.sharding.constrain`` (identity when no mesh is active, so smoke
+tests on one CPU device are unaffected).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    """Truncated-normal fan-in init (LLaMA-style 1/sqrt(d_in))."""
+    std = d_in**-0.5
+    return (jax.random.truncated_normal(key, -3, 3, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.truncated_normal(key, -3, 3, (vocab, d)) * (d**-0.5)).astype(
+        dtype
+    )
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def init_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(params: dict, x: Array, kind: str = "rmsnorm", eps: float = 1e-5):
+    return rmsnorm(params, x, eps) if kind == "rmsnorm" else layernorm(params, x, eps)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> Array:
+    """Whisper-style fixed sinusoidal table (n_pos, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(n_pos)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# GLU MLP family (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, dtype, variant: str = "glu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+    if variant == "glu":
+        p["w_gate"] = dense_init(k1, d, d_ff, dtype)
+    return p
+
+
+def mlp(params: dict, x: Array, act: str = "silu") -> Array:
+    actfn = jax.nn.silu if act == "silu" else (lambda v: jax.nn.gelu(v, approximate=True))
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if "w_gate" in params:  # GLU family
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = actfn(gate) * up
+    else:  # plain 2-matrix MLP (granite / minitron / whisper)
+        h = actfn(up)
+    h = constrain(h, "batch", None, "mlp")
+    out = jnp.einsum("...f,fd->...d", h, params["w_down"])
+    # Force the TP partial-sum reduction HERE, in bf16: without this, XLA
+    # defers the all-reduce past the residual into the next norm's fp32
+    # region — 2x the wire bytes (EXPERIMENTS.md §Perf, codeqwen cell).
+    return constrain(out, "batch", None, "embed")
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab_padded: int, d: int, dtype, tie: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"table": embed_init(k1, vocab_padded, d, dtype)}
+    if not tie:
+        p["unembed"] = dense_init(k2, d, vocab_padded, dtype)
+    return p
+
+
+def embed(params: dict, tokens: Array, dtype) -> Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(dtype)
+
+
+def unembed(params: dict, x: Array, tie: bool) -> Array:
+    if tie:
+        return jnp.einsum("...d,vd->...v", x, params["table"])
+    return jnp.einsum("...d,dv->...v", x, params["unembed"])

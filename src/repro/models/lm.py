@@ -1,0 +1,509 @@
+"""Model assembly: block composition, segment-scanned stacks, caches,
+decoder-only / encoder-decoder / VLM variants, and the train/prefill/decode
+entry points that the launcher lowers.
+
+Layer stacking
+--------------
+Consecutive layers of the same kind form a *segment* whose params are
+stacked along a leading axis and executed with ``lax.scan`` (+ optional
+``jax.checkpoint`` per layer).  One compiled block body per segment keeps
+the HLO small enough to compile 61-layer/88-layer models with a 512-device
+GSPMD partition in reasonable time — this is the difference between a
+minutes-long and an hours-long dry-run.
+
+Heterogeneous patterns map to segments naturally:
+    deepseek-v3   [dense x3][moe x58]            -> 2 segments
+    xlstm-350m    ([mlstm x7][slstm x1]) x3      -> 6 segments
+    zamba2        [mamba2 x38] + shared attention block applied every k-th
+                  layer inside the scan (lax.cond on the layer index)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain, grad_reduce_boundary
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .config import ModelConfig
+from .layers import (
+    apply_norm,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    mlp,
+    sinusoidal_positions,
+    unembed,
+)
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, kind: str, cfg: ModelConfig) -> dict:
+    dt = _pdtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("dense", "moe"):
+        p = {"ln1": init_norm(d, dt), "ln2": init_norm(d, dt)}
+        if cfg.attn_type == "mla":
+            p["attn"] = attn_mod.init_mla(ks[0], cfg, dt)
+        else:
+            p["attn"] = attn_mod.init_gqa(ks[0], cfg, dt)
+        if kind == "dense":
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, dt, cfg.mlp_variant)
+        else:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dt)
+        return p
+    if kind == "mamba2":
+        return {"ln": init_norm(d, dt), "mamba": ssm_mod.init_mamba2(ks[0], cfg, dt)}
+    if kind == "mlstm":
+        return {"ln": init_norm(d, dt), "mlstm": xlstm_mod.init_mlstm(ks[0], cfg, dt)}
+    if kind == "slstm":
+        return {"ln": init_norm(d, dt), "slstm": xlstm_mod.init_slstm(ks[0], cfg, dt)}
+    raise ValueError(kind)
+
+
+def _layer_forward(
+    params: dict,
+    kind: str,
+    cfg: ModelConfig,
+    x: Array,
+    positions: Array,
+    shared: Optional[dict] = None,
+    layer_idx: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """-> (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe"):
+        x = grad_reduce_boundary(x)
+        h = apply_norm(params["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            a = attn_mod.mla_forward(params["attn"], cfg, h, positions)
+        else:
+            a = attn_mod.gqa_forward(
+                params["attn"], cfg, h, positions, rope=cfg.use_rope
+            )
+        x = x + a
+        h = apply_norm(params["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        if kind == "dense":
+            x = x + mlp(params["mlp"], h, cfg.act)
+        else:
+            y, aux = moe_mod.moe_ffn(params["moe"], cfg, h, cfg.act)
+            x = x + y
+        # sequence-parallel boundary: no-op unless rules map "seq" (SP mode)
+        x = constrain(x, "batch", "seq", "embed")
+        return x, aux
+    if kind == "mamba2":
+        h = apply_norm(params["ln"], x, cfg.norm_type, cfg.norm_eps)
+        x = x + ssm_mod.mamba2_forward(params["mamba"], cfg, h)
+        if shared is not None and cfg.attn_every and layer_idx is not None:
+            def with_attn(x):
+                h = apply_norm(shared["ln1"], x, cfg.norm_type, cfg.norm_eps)
+                x = x + attn_mod.gqa_forward(shared["attn"], cfg, h, positions)
+                h = apply_norm(shared["ln2"], x, cfg.norm_type, cfg.norm_eps)
+                return x + mlp(shared["mlp"], h, cfg.act)
+
+            x = jax.lax.cond(
+                layer_idx % cfg.attn_every == 0, with_attn, lambda x: x, x
+            )
+        return x, aux
+    if kind == "mlstm":
+        h = apply_norm(params["ln"], x, cfg.norm_type, cfg.norm_eps)
+        return x + xlstm_mod.mlstm_forward(params["mlstm"], cfg, h), aux
+    if kind == "slstm":
+        h = apply_norm(params["ln"], x, cfg.norm_type, cfg.norm_eps)
+        return x + xlstm_mod.slstm_forward(params["slstm"], cfg, h), aux
+    raise ValueError(kind)
+
+
+def _init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if kind in ("dense", "moe"):
+        if cfg.attn_type == "mla":
+            return attn_mod.init_mla_cache(cfg, batch, max_len, dtype)
+        return attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba2":
+        return ssm_mod.init_mamba2_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def _layer_decode(
+    params: dict,
+    kind: str,
+    cfg: ModelConfig,
+    x: Array,
+    cache,
+    shared: Optional[dict] = None,
+    shared_cache=None,
+    layer_idx: Optional[Array] = None,
+):
+    """-> (x, new_cache, new_shared_cache)."""
+    if kind in ("dense", "moe"):
+        h = apply_norm(params["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            decode_fn = (
+                attn_mod.mla_decode_absorbed if cfg.mla_absorbed else attn_mod.mla_decode
+            )
+            a, cache = decode_fn(params["attn"], cfg, h, cache)
+        else:
+            a, cache = attn_mod.gqa_decode(
+                params["attn"], cfg, h, cache, rope=cfg.use_rope
+            )
+        x = x + a
+        h = apply_norm(params["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        if kind == "dense":
+            x = x + mlp(params["mlp"], h, cfg.act)
+        else:
+            y, _ = moe_mod.moe_ffn(params["moe"], cfg, h, cfg.act)
+            x = x + y
+        return x, cache, shared_cache
+    if kind == "mamba2":
+        h = apply_norm(params["ln"], x, cfg.norm_type, cfg.norm_eps)
+        y, cache = ssm_mod.mamba2_decode(params["mamba"], cfg, h, cache)
+        x = x + y
+        if shared is not None and cfg.attn_every and layer_idx is not None:
+            def with_attn(arg):
+                x, sc = arg
+                h = apply_norm(shared["ln1"], x, cfg.norm_type, cfg.norm_eps)
+                a, sc = attn_mod.gqa_decode(shared["attn"], cfg, h, sc)
+                x = x + a
+                h = apply_norm(shared["ln2"], x, cfg.norm_type, cfg.norm_eps)
+                return x + mlp(shared["mlp"], h, cfg.act), sc
+
+            def skip(arg):
+                x, sc = arg
+                # keep cache shape: append a masked (zero-weight) entry is
+                # wrong; instead leave cache untouched
+                return x, sc
+
+            x, shared_cache = jax.lax.cond(
+                layer_idx % cfg.attn_every == 0, with_attn, skip, (x, shared_cache)
+            )
+        return x, cache, shared_cache
+    if kind == "mlstm":
+        h = apply_norm(params["ln"], x, cfg.norm_type, cfg.norm_eps)
+        y, cache = xlstm_mod.mlstm_decode(params["mlstm"], cfg, h, cache)
+        return x + y, cache, shared_cache
+    if kind == "slstm":
+        h = apply_norm(params["ln"], x, cfg.norm_type, cfg.norm_eps)
+        y, cache = xlstm_mod.slstm_decode(params["slstm"], cfg, h, cache)
+        return x + y, cache, shared_cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+
+class Segment(NamedTuple):
+    kind: str
+    n: int
+    start: int  # absolute index of first layer
+
+
+def segments_of(cfg: ModelConfig) -> List[Segment]:
+    kinds = cfg.layer_kinds()
+    segs: List[Segment] = []
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        segs.append(Segment(kind=kinds[i], n=j - i, start=i))
+        i = j
+    return segs
+
+
+def _stack_layers(key, kind: str, n: int, cfg: ModelConfig):
+    keys = jax.random.split(key, n)
+    layers = [_init_layer(k, kind, cfg) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ---------------------------------------------------------------------------
+# full decoder stack
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = _pdtype(cfg)
+    keys = jax.random.split(key, 8 + len(segments_of(cfg)))
+    p: Dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_padded, cfg.d_model, dt, cfg.tie_embeddings),
+        "final_norm": init_norm(cfg.d_model, dt),
+        "segments": [
+            _stack_layers(keys[2 + i], seg.kind, seg.n, cfg)
+            for i, seg in enumerate(segments_of(cfg))
+        ],
+    }
+    nseg = len(segments_of(cfg))
+    if cfg.block_type == "mamba2" and cfg.attn_every:
+        shared = {
+            "ln1": init_norm(cfg.d_model, dt),
+            "ln2": init_norm(cfg.d_model, dt),
+            "attn": attn_mod.init_gqa(keys[2 + nseg], cfg, dt),
+            "mlp": init_mlp(keys[3 + nseg], cfg.d_model, cfg.d_ff, dt, cfg.mlp_variant),
+        }
+        p["shared_attn"] = shared
+    if cfg.is_encdec:
+        p["encoder"] = _init_encoder(keys[4 + nseg], cfg)
+        p["cross"] = _stack_cross_layers(keys[5 + nseg], cfg)
+    return p
+
+
+def backbone_forward(
+    params: dict, cfg: ModelConfig, x: Array, positions: Array,
+    cross_kv: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Run all segments.  x: (B, S, D) embedded input.  -> (hidden, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_attn")
+    cross_params = params.get("cross")
+
+    for si, seg in enumerate(segments_of(cfg)):
+        seg_params = params["segments"][si]
+        idxs = jnp.arange(seg.start, seg.start + seg.n)
+
+        def body(carry, inp):
+            x = carry
+            layer_params, layer_idx = inp
+            x, aux = _layer_forward(
+                layer_params, seg.kind, cfg, x, positions, shared, layer_idx
+            )
+            if cross_params is not None and seg.kind in ("dense", "moe"):
+                # encoder-decoder: interleave cross-attention after self-attn
+                x = _cross_forward_one(cross_params, cfg, x, layer_idx, cross_kv)
+            return x, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, (seg_params, idxs))
+        aux_total = aux_total + jnp.sum(auxs)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _init_encoder(key, cfg: ModelConfig) -> dict:
+    dt = _pdtype(cfg)
+    keys = jax.random.split(key, 2)
+    return {
+        "layers": _stack_layers(keys[0], "dense", cfg.n_enc_layers, cfg),
+        "final_norm": init_norm(cfg.d_model, dt),
+    }
+
+
+def _stack_cross_layers(key, cfg: ModelConfig):
+    """One cross-attention (+norm) per decoder layer, stacked."""
+    dt = _pdtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers)
+
+    def one(k):
+        return {
+            "ln": init_norm(cfg.d_model, dt),
+            "attn": attn_mod.init_gqa(k, cfg, dt),
+        }
+
+    layers = [one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def _cross_forward_one(cross_params, cfg, x, layer_idx, cross_kv):
+    layer = jax.tree.map(lambda a: a[layer_idx], cross_params)
+    h = apply_norm(layer["ln"], x, cfg.norm_type, cfg.norm_eps)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    a = attn_mod.gqa_forward(
+        layer["attn"], cfg, h, positions, causal=False, rope=False, kv=(cross_kv, None)
+    )
+    return x + a
+
+
+def encoder_forward(params: dict, cfg: ModelConfig, frames: Array) -> Array:
+    """frames: (B, S_enc, D) stubbed post-conv embeddings -> encoder memory."""
+    params = cast_params(params, cfg)
+    frames = frames.astype(_dtype(cfg))
+    b, s, d = frames.shape
+    pos_table = sinusoidal_positions(s, d).astype(frames.dtype)
+    x = frames + pos_table[None]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc = params["encoder"]
+
+    def body(x, layer_params):
+        h = apply_norm(layer_params["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        a = attn_mod.gqa_forward(
+            layer_params["attn"], cfg, h, positions, causal=False, rope=False
+        )
+        x = x + a
+        h = apply_norm(layer_params["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        return x + mlp(layer_params["mlp"], h, cfg.act), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return apply_norm(enc["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def cast_params(params: dict, cfg: ModelConfig) -> dict:
+    """Cast weights to the compute dtype once per step.  Precision-critical
+    paths (norms, router logits, SSM gates, losses) re-promote to fp32
+    internally, so this is safe; it is what makes every matmul bf16 on TPU."""
+    dt = _dtype(cfg)
+    return jax.tree.map(lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, params)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,  # (B, S) int32
+    img_embeds: Optional[Array] = None,  # (B, N_img, D) VLM stub
+    frames: Optional[Array] = None,  # (B, S_enc, D) enc-dec stub
+) -> Tuple[Array, Array]:
+    """Token stream -> final hidden states (B, S_total, D), aux loss."""
+    dt = _dtype(cfg)
+    params = cast_params(params, cfg)
+    x = embed(params["embed"], tokens, dt)
+    x = x * jnp.asarray(cfg.d_model**0.5, dt)  # gemma/whisper-style scale
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(dt), x], axis=1)
+    b, s, _ = x.shape
+    if not cfg.use_rope:  # absolute sinusoidal positions (whisper decoder)
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(dt)[None]
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cross_kv = None
+    if cfg.is_encdec:
+        assert frames is not None
+        cross_kv = encoder_forward(params, cfg, frames.astype(dt))
+    h, aux = backbone_forward(params, cfg, x, positions, cross_kv)
+    return h, aux
+
+
+def logits_for(params: dict, cfg: ModelConfig, hidden: Array) -> Array:
+    logits = unembed(params["embed"], hidden, cfg.tie_embeddings)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# ----- caches ---------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    """Per-layer caches grouped by segment (stacked along the layer axis)."""
+
+    segments: Tuple[Any, ...]
+    shared_attn: Any  # zamba shared-attn KV cache (or None)
+    cross_kv: Any  # enc-dec encoder memory (or None)
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, cross_kv: Optional[Array] = None
+) -> DecodeState:
+    dt = _dtype(cfg)
+    seg_caches = []
+    for seg in segments_of(cfg):
+        one = _init_layer_cache(seg.kind, cfg, batch, max_len, dt)
+        seg_caches.append(jax.tree.map(lambda a: jnp.stack([a] * seg.n), one))
+    shared = None
+    if cfg.block_type == "mamba2" and cfg.attn_every:
+        shared = attn_mod.init_kv_cache(cfg, batch, max_len, dt)
+    return DecodeState(segments=tuple(seg_caches), shared_attn=shared, cross_kv=cross_kv)
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, tokens: Array, state: DecodeState
+) -> Tuple[Array, DecodeState]:
+    """One token in (B, 1) -> logits (B, vocab_padded), updated caches."""
+    dt = _dtype(cfg)
+    params = cast_params(params, cfg)
+    x = embed(params["embed"], tokens, dt) * jnp.asarray(cfg.d_model**0.5, dt)
+    x = constrain(x, "batch", None, "embed")
+    shared = params.get("shared_attn")
+    cross_params = params.get("cross")
+    new_seg_caches = []
+    shared_cache = state.shared_attn
+
+    for si, seg in enumerate(segments_of(cfg)):
+        seg_params = params["segments"][si]
+        seg_cache = state.segments[si]
+        idxs = jnp.arange(seg.start, seg.start + seg.n)
+
+        if seg.kind == "mamba2" and shared is not None:
+            # shared cache is carried across layers -> put it in the scan carry
+            def body(carry, inp):
+                x, sc = carry
+                layer_params, layer_cache, layer_idx = inp
+                x, new_cache, sc = _layer_decode(
+                    layer_params, seg.kind, cfg, x, layer_cache, shared, sc, layer_idx
+                )
+                return (x, sc), new_cache
+
+            (x, shared_cache), new_cache = jax.lax.scan(
+                body, (x, shared_cache), (seg_params, seg_cache, idxs)
+            )
+        else:
+            def body(x, inp):
+                layer_params, layer_cache, layer_idx = inp
+                x, new_cache, _ = _layer_decode(
+                    layer_params, seg.kind, cfg, x, layer_cache, None, None, layer_idx
+                )
+                if cross_params is not None and seg.kind in ("dense", "moe"):
+                    x = _cross_decode_one(cross_params, cfg, x, layer_idx, state.cross_kv)
+                return x, new_cache
+
+            x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache, idxs))
+        new_seg_caches.append(new_cache)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = logits_for(params, cfg, x)[:, 0]
+    return logits, DecodeState(
+        segments=tuple(new_seg_caches), shared_attn=shared_cache, cross_kv=state.cross_kv
+    )
+
+
+def _cross_decode_one(cross_params, cfg, x, layer_idx, cross_kv):
+    layer = jax.tree.map(lambda a: a[layer_idx], cross_params)
+    h = apply_norm(layer["ln"], x, cfg.norm_type, cfg.norm_eps)
+    b = x.shape[0]
+    positions = jnp.zeros((b, 1), jnp.int32)
+    a = attn_mod.gqa_forward(
+        layer["attn"], cfg, h, positions, causal=False, rope=False, kv=(cross_kv, None)
+    )
+    return x + a

@@ -1,0 +1,69 @@
+"""Losses: sequence-chunked cross-entropy over a padded vocab.
+
+The LM head is the memory cliff for the big-vocab archs (gemma/minitron:
+256k vocab -> a materialized (B, S, V) bf16 logit tensor at train_4k would
+be ~34 GiB per device).  We never materialize it: the head runs under a
+lax.scan over sequence chunks, each chunk computing logits -> log-softmax ->
+NLL and reducing to scalars, with jax.checkpoint so the backward pass
+recomputes chunk logits instead of storing them.  Peak head memory drops to
+(B, loss_chunk, V) — the single biggest memory lever in the §Perf log.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import unembed
+
+Array = jax.Array
+
+
+def _chunk_nll(params, cfg: ModelConfig, h_chunk: Array, t_chunk: Array) -> Tuple[Array, Array]:
+    """-> (sum NLL over chunk, sum correct-token count). fp32 accumulation."""
+    table = params["embed"]
+    table = {k: v.astype(h_chunk.dtype) if v.dtype == jnp.float32 else v for k, v in table.items()}
+    logits = unembed(table, h_chunk, cfg.tie_embeddings).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.vocab_padded != cfg.vocab:
+        # padded vocab rows exist only for sharding; mask them out of softmax
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, t_chunk[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    acc = (jnp.argmax(logits, axis=-1) == t_chunk).astype(jnp.float32)
+    return jnp.sum(nll), jnp.sum(acc)
+
+
+def chunked_cross_entropy(
+    params: dict, cfg: ModelConfig, hidden: Array, targets: Array
+) -> Tuple[Array, Array]:
+    """hidden: (B, S, D), targets: (B, S) -> (mean NLL, mean accuracy)."""
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    def body(carry, inp):
+        nll_sum, acc_sum = carry
+        h_c, t_c = inp
+        nll, acc = _chunk_nll(params, cfg, h_c, t_c)
+        return (nll_sum + nll, acc_sum + acc), None
+
+    body = jax.checkpoint(body)
+    hs = hidden[:, : n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    ts = targets[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    (nll_sum, acc_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ts)
+    )
+    if rem:
+        nll, acc = _chunk_nll(params, cfg, hidden[:, n * chunk :], targets[:, n * chunk :])
+        nll_sum, acc_sum = nll_sum + nll, acc_sum + acc
+    count = b * s
+    return nll_sum / count, acc_sum / count

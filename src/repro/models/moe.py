@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, EP-shardable dispatch.
+
+Dispatch is capacity-based (drop-on-overflow) via sort-free cumulative
+positioning: tokens pick experts, each (token, choice) computes its slot in
+the expert's buffer by a masked cumsum, and slots beyond capacity are
+dropped (standard Switch/GShard semantics, capacity_factor configurable).
+The (E, C, D) expert buffers carry an "experts" logical axis, so under the
+production mesh GSPMD turns gather/scatter into the canonical EP
+all-to-alls.
+
+Router supports DeepSeek's aux-loss-free bias balancing (a slowly-updated
+per-expert bias added to the routing logits *only for selection*, not for
+the combine weights); the classic load-balancing auxiliary loss is also
+computed and returned for monitoring.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from .config import ModelConfig
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, dff, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    std = d**-0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept fp32
+        "router_bias": jnp.zeros((e,), jnp.float32),
+        "w_gate": (jax.random.truncated_normal(ks[1], -3, 3, (e, d, dff)) * std).astype(dtype),
+        "w_up": (jax.random.truncated_normal(ks[2], -3, 3, (e, d, dff)) * std).astype(dtype),
+        "w_down": (jax.random.truncated_normal(ks[3], -3, 3, (e, dff, d)) * (dff**-0.5)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        from .layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], d, cfg.d_ff_expert * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _routing(params, cfg: ModelConfig, x2d: Array) -> Tuple[Array, Array, Array]:
+    """-> (top-k expert ids (T,k), combine weights (T,k), aux loss scalar)."""
+    logits = jnp.einsum(
+        "td,de->te", x2d.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = logits + params["router_bias"] if cfg.router_aux_free_bias else logits
+    _, idx = jax.lax.top_k(select, cfg.top_k)  # (T, k)
+    gates = jnp.take_along_axis(probs, idx, axis=-1)  # (T, k)
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance monitor: E * sum_e f_e * p_e
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0
+    ) / cfg.top_k
+    aux = e * jnp.sum(me * ce)
+    return idx, gates.astype(x2d.dtype), aux
+
+
+def moe_ffn(params: dict, cfg: ModelConfig, x: Array, act: str = "silu") -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (same, aux_loss).  Capacity-dropped top-k dispatch."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+    x2d = x.reshape(t, d)
+
+    idx, gates, aux = _routing(params, cfg, x2d)  # (T,k)
+
+    # --- slot assignment: position of each (token, choice) within its expert
+    flat_e = idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # (T*k, E)
+    slot = jnp.sum(pos_in_expert, axis=-1)  # (T*k,)
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap)  # overflow -> scratch row
+
+    # --- dispatch: (E, cap+1, D) buffers (+1 scratch row swallows drops)
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    tok_ids = jnp.repeat(jnp.arange(t), k)
+    buf = buf.at[flat_e, slot].add(x2d[tok_ids])
+    buf = constrain(buf, "experts", None, None)
+
+    # --- expert FFN (batched einsum over the expert dim => EP-shardable)
+    actfn = jax.nn.silu if act == "silu" else (lambda v: jax.nn.gelu(v, approximate=True))
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = actfn(gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_buf = constrain(out_buf, "experts", None, None)
+
+    # --- combine: gather slots back and weight by gates
+    gathered = out_buf[flat_e, slot]  # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    combined = jnp.zeros((t, d), x.dtype).at[tok_ids].add(
+        gathered * gates.reshape(-1)[:, None]
+    )
+
+    out = combined.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        from .layers import mlp
+
+        out = out + mlp(params["shared"], x, act)  # (B,S,D): keeps constraints rank-3
+
+    return out, aux
+
+
+def update_router_bias(params: dict, cfg: ModelConfig, aux_counts: Array, lr: float = 1e-3) -> dict:
+    """DeepSeek aux-free balancing: nudge biases toward uniform expert load.
+
+    ``aux_counts``: (E,) fraction of tokens routed to each expert this step.
+    Called from the train loop (outside grad) — the bias is a buffer, not a
+    trained parameter.
+    """
+    target = 1.0 / cfg.n_experts
+    new_bias = params["router_bias"] + lr * jnp.sign(target - aux_counts)
+    return dict(params, router_bias=new_bias)

@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD) block: chunked training form + recurrent decode.
+
+Training uses the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): the
+sequence is split into chunks of length Q; within a chunk the state-space
+kernel is evaluated as a masked (semiseparable) attention-like product, and
+chunk boundary states are propagated by a lax.scan — O(T Q) work and O(T)
+memory instead of the O(T^2) naive form, and only the tiny inter-chunk scan
+is sequential.  This is also what makes the 500k-token hybrid cells viable
+(DESIGN.md §Arch-applicability).
+
+Decode carries the (H, N, P) state exactly: h_t = a_t h_{t-1} + dt B_t x_t,
+y_t = C_t h_t + D x_t — O(1) per token, no KV cache.
+
+Note (DESIGN.md Sec. 5): the SSD recurrence is input-gated (time-varying),
+so the paper's circulant structure does NOT apply inside this block.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from .config import ModelConfig
+from .layers import dense_init, init_norm, rmsnorm
+
+Array = jax.Array
+
+CHUNK = 128
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    din, ns, g = cfg.d_ssm_inner, cfg.ssm_state, cfg.ssm_groups
+    nh = cfg.n_ssm_heads
+    conv_dim = din + 2 * g * ns
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din + 2 * g * ns + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": init_norm(din, dtype),
+        "out_proj": dense_init(ks[2], din, d, dtype),
+    }
+
+
+class Mamba2Cache(NamedTuple):
+    conv: Array  # (B, conv_width-1, conv_dim) — rolling conv window
+    state: Array  # (B, H, N, P) — SSM state
+    length: Array  # (B,)
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> Mamba2Cache:
+    din, ns, g = cfg.d_ssm_inner, cfg.ssm_state, cfg.ssm_groups
+    nh, p = cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_dim = din + 2 * g * ns
+    return Mamba2Cache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, nh, ns, p), jnp.float32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    din, ns, g = cfg.d_ssm_inner, cfg.ssm_state, cfg.ssm_groups
+    nh = cfg.n_ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * ns], axis=-1)
+    return z, xbc, dt  # gate, conv-input, dt-logits
+
+
+def _causal_conv(cfg, xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along seq: xbc (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # k is 4: static unroll
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, a_log, B, C, d_skip, chunk=CHUNK):
+    """Chunked SSD scan.
+
+    x:  (Bt, T, H, P)   dt: (Bt, T, H)   B, C: (Bt, T, G, N)
+    returns y: (Bt, T, H, P), final_state: (Bt, H, N, P)
+    """
+    bt, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    nc = t // chunk
+    A = -jnp.exp(a_log)  # (H,) negative
+
+    xc = x.reshape(bt, nc, chunk, h, p)
+    dtc = dt.reshape(bt, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(bt, nc, chunk, g, n), rep, axis=3)  # (bt,nc,Q,H,N)
+    Cc = jnp.repeat(C.reshape(bt, nc, chunk, g, n), rep, axis=3)
+
+    da = dtc * A  # (bt,nc,Q,H) log-decay per step
+    cum = jnp.cumsum(da, axis=2)  # S_i (inclusive)
+    seg_total = cum[:, :, -1, :]  # (bt,nc,H)
+
+    # ---- intra-chunk: masked semiseparable "attention"
+    # G[i, j] = C_i . B_j * exp(S_i - S_j) * dt_j   for j <= i
+    li = cum[:, :, :, None, :]  # (bt,nc,Q,1,H)
+    lj = cum[:, :, None, :, :]  # (bt,nc,1,Q,H)
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))  # (bt,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc)  # (bt,nc,Q,Q,H)
+    scores = scores * decay * dtc[:, :, None, :, :]
+    scores = jnp.where(mask[None, None, :, :, None], scores, 0.0)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xc)
+
+    # ---- chunk summary states: sum_j exp(S_Q - S_j) dt_j B_j x_j^T
+    w = jnp.exp(jnp.clip(seg_total[:, :, None, :] - cum, -60.0, 0.0)) * dtc
+    chunk_state = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w, Bc, xc)
+
+    # ---- inter-chunk recurrence over nc chunks
+    def scan_body(h_prev, inp):
+        cs, tot = inp  # (bt,H,N,P), (bt,H)
+        h_new = h_prev * jnp.exp(jnp.clip(tot, -60.0, 0.0))[:, :, None, None] + cs
+        return h_new, h_prev  # emit the state *entering* the chunk
+
+    h0 = jnp.zeros((bt, h, n, p), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        scan_body,
+        h0,
+        (chunk_state.swapaxes(0, 1).astype(jnp.float32), seg_total.swapaxes(0, 1)),
+    )
+    h_in = h_in.swapaxes(0, 1)  # (bt,nc,H,N,P) state entering each chunk
+
+    # ---- inter-chunk contribution: C_i . h_in * exp(S_i)
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp,bcqh->bcqhp",
+        Cc,
+        h_in.astype(Cc.dtype),
+        jnp.exp(jnp.clip(cum, -60.0, 0.0)).astype(Cc.dtype),
+    )
+
+    y = (y_intra + y_inter).reshape(bt, t, h, p) + x * d_skip[None, None, :, None]
+    return y, h_final
+
+
+def mamba2_forward(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    """x: (B, S, D) -> (B, S, D).  S must be a multiple of CHUNK (pad upstream)."""
+    b, s, d = x.shape
+    din, ns, g = cfg.d_ssm_inner, cfg.ssm_state, cfg.ssm_groups
+    nh, p = cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xbc, dt_logit = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(cfg, xbc, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(xbc, [din, din + g * ns], axis=-1)
+    xs = constrain(xs, "batch", None, "ssm_inner")
+
+    dt = jax.nn.softplus(dt_logit.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    xh = xs.reshape(b, s, nh, p)
+    Bh = B.reshape(b, s, g, ns)
+    Ch = C.reshape(b, s, g, ns)
+
+    pad = (-s) % CHUNK
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    y, _ = _ssd_chunked(
+        xh.astype(jnp.float32), dt, params["a_log"].astype(jnp.float32),
+        Bh.astype(jnp.float32), Ch.astype(jnp.float32),
+        params["d_skip"].astype(jnp.float32),
+    )
+    y = y[:, :s].reshape(b, s, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)  # gated
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+
+
+def mamba2_decode(
+    params: dict, cfg: ModelConfig, x: Array, cache: Mamba2Cache
+) -> Tuple[Array, Mamba2Cache]:
+    """Single-token recurrent step.  x: (B, 1, D)."""
+    b = x.shape[0]
+    din, ns, g = cfg.d_ssm_inner, cfg.ssm_state, cfg.ssm_groups
+    nh, p = cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])[:, 0]
+    z, xbc, dt_logit = _split_proj(cfg, zxbcdt[:, None, :])
+    xbc = xbc[:, 0]
+
+    # rolling causal conv
+    window = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs, B, C = jnp.split(conv_out, [din, din + g * ns], axis=-1)
+    dt = jax.nn.softplus(dt_logit[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)  # (B,H)
+
+    xh = xs.reshape(b, nh, p).astype(jnp.float32)
+    rep = nh // g
+    Bh = jnp.repeat(B.reshape(b, g, ns), rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(C.reshape(b, g, ns), rep, axis=1).astype(jnp.float32)
+
+    state = cache.state * a[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) + xh * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, Mamba2Cache(conv=new_conv, state=state, length=cache.length + 1)

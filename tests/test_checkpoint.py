@@ -1,0 +1,68 @@
+"""Checkpoint/fault-tolerance unit tests (mesh-elastic path is covered by
+tests/dist_progs/train_prog.py)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (4, 3)),
+        "nested": {"b": jnp.arange(5), "c": [jnp.ones(2), jnp.zeros((2, 2))]},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 7, tree)
+    step, restored = ckpt.restore(str(tmp_path), None, jax.eval_shape(lambda: tree))
+    assert step == 7
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        tree,
+        restored,
+    )
+
+
+def test_latest_and_retention(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 3  # pruned to the newest 3
+
+
+def test_corruption_detected(tmp_path):
+    tree = _tree()
+    path = ckpt.save(str(tmp_path), 1, tree)
+    # flip bytes in the arrays file
+    arrs = os.path.join(path, "arrays.npz")
+    data = bytearray(open(arrs, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(arrs, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: tree))
+
+
+def test_atomic_publish_no_partial_dirs(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 1, tree)
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith(".tmp") for n in names), names
+
+
+def test_restore_specific_step(tmp_path):
+    t1, t2 = _tree(1), _tree(2)
+    ckpt.save(str(tmp_path), 1, t1)
+    ckpt.save(str(tmp_path), 2, t2)
+    step, restored = ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: t1))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t1["a"]))

@@ -1,0 +1,33 @@
+"""Multi-device tests, each in a subprocess with 8 fake CPU devices so the
+main pytest process keeps jax at 1 device (the dry-run rule)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+PROGS = [
+    "fft_prog.py",
+    "recovery_prog.py",
+    "fused_recovery_prog.py",
+    "train_prog.py",
+    "compression_prog.py",
+]
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+@pytest.mark.parametrize("prog", PROGS)
+def test_distributed_prog(prog):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    res = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist_progs", prog)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert res.returncode == 0, f"{prog} failed:\n{res.stdout}\n{res.stderr}"
+    assert "ALL OK" in res.stdout, res.stdout

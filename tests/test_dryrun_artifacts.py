@@ -1,0 +1,82 @@
+"""Validate the dry-run artifact set (skipped if the sweep hasn't been run).
+
+These check the *deliverable*: every assigned (arch x shape x mesh) cell
+compiled, recorded sane analysis numbers, and the roofline derivation holds.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(ART, "*.json")),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun --all)",
+)
+
+
+def _cells():
+    out = {}
+    for p in glob.glob(os.path.join(ART, "*.json")):
+        rec = json.load(open(p))
+        out[(rec.get("arch"), rec.get("shape"), rec.get("mesh"))] = rec
+    return out
+
+
+def test_all_assigned_cells_present_and_ok():
+    from repro.configs.registry import all_arch_ids, cells_for
+
+    cells = _cells()
+    missing, failed = [], []
+    for arch in all_arch_ids():
+        for shape in cells_for(arch):
+            for mesh in ("single", "multipod"):
+                rec = cells.get((arch, shape, mesh))
+                if rec is None:
+                    missing.append((arch, shape, mesh))
+                elif not rec.get("ok"):
+                    failed.append((arch, shape, mesh))
+    assert not missing, f"missing cells: {missing}"
+    assert not failed, f"failed cells: {failed}"
+
+
+def test_cost_numbers_sane():
+    from repro.configs.registry import SHAPES
+
+    for key, rec in _cells().items():
+        if not rec.get("ok"):
+            continue
+        w = rec["hlo_walk"]
+        assert w["flops"] > 0, key
+        assert w["bytes"] > 0, key
+        # compiled flops must be at least the dense-model lower bound / devices
+        seq, batch, kind = SHAPES[rec["shape"]]
+        n_active = rec["params"]["active"]
+        if kind == "train":
+            lower = 6.0 * n_active * seq * batch * 0.5  # generous slack
+            assert w["flops"] * rec["n_devices"] > lower * 0.05, key
+        # memory analysis present
+        assert rec["memory_analysis"].get("temp_size_in_bytes", 0) >= 0, key
+
+
+def test_multipod_shards_pod_axis():
+    """Multipod cells must use 512 devices and a 3-axis mesh."""
+    for key, rec in _cells().items():
+        if not rec.get("ok"):
+            continue
+        if rec["mesh"] == "multipod":
+            assert rec["n_devices"] == 512, key
+            assert rec["mesh_shape"] == [2, 16, 16], key
+        else:
+            assert rec["n_devices"] == 256, key
+
+
+def test_train_cells_have_collectives():
+    """Every sharded train cell must communicate (grad/TP reductions)."""
+    for key, rec in _cells().items():
+        if rec.get("ok") and rec["shape"] == "train_4k":
+            total = sum(rec["hlo_walk"]["collective_bytes"].values())
+            assert total > 1e6, (key, total)

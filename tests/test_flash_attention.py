@@ -1,0 +1,58 @@
+"""Flash-attention Pallas kernel vs naive oracle and vs the model's chunked
+attention (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention, flash_hbm_bytes
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models.attention import _attend_chunked
+
+
+def _qkv(key, b, s, h, kh, d):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kh, d))
+    v = jax.random.normal(ks[2], (b, s, kh, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("s", [256, 512, 768])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(s, causal):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, s, 2, 2, 64)
+    got = flash_attention(q, k, v, causal=causal)
+    bh = lambda a: a.transpose(0, 2, 1, 3).reshape(-1, s, 64)
+    want = flash_attention_ref(bh(q), bh(k), bh(v), causal=causal)
+    want = want.reshape(2, 2, s, 64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (8, 1)])
+def test_flash_gqa_matches_model_attention(gqa):
+    h, kh = gqa
+    s, d = 512, 32
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, s, h, kh, d)
+    got = flash_attention(q, k, v, causal=True)
+    want = _attend_chunked(q, k, v, causal=True, chunk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+def test_causal_tile_skip_exactness():
+    """The diagonal KV-tile early exit must not change results."""
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 1024, 2, 2, 32)
+    got = flash_attention(q, k, v, causal=True)
+    bh = lambda a: a.transpose(0, 2, 1, 3).reshape(-1, 1024, 32)
+    want = flash_attention_ref(bh(q), bh(k), bh(v), causal=True)
+    want = want.reshape(1, 2, 1024, 32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+def test_analytic_traffic_much_smaller_than_scores():
+    """The kernel's HBM model must be far below the score-materializing cost."""
+    b, s, h, d = 16, 4096, 32, 128
+    fused = flash_hbm_bytes(b, s, s, h, d)
+    score_tiles = b * h * s * s * 4  # one fp32 materialization of scores
+    assert fused * 10 < score_tiles

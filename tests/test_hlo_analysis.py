@@ -1,0 +1,73 @@
+"""The roofline depends on the HLO walker being right — pin it to closed forms."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _hlo(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+S = jax.ShapeDtypeStruct
+
+
+def test_single_matmul_flops_exact():
+    hlo = _hlo(lambda a, b: a @ b, S((128, 64), jnp.float32), S((64, 32), jnp.float32))
+    c = analyze_hlo(hlo)
+    assert c.flops == pytest.approx(2 * 128 * 64 * 32, rel=0.05)
+
+
+def test_matmul_bytes_reasonable():
+    hlo = _hlo(lambda a, b: a @ b, S((128, 128), jnp.float32), S((128, 128), jnp.float32))
+    c = analyze_hlo(hlo)
+    ideal = 3 * 128 * 128 * 4
+    assert ideal * 0.9 <= c.bytes <= ideal * 3
+
+
+def test_scan_trip_count_applied():
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.dot(c, w), None
+
+        return jax.lax.scan(body, x, ws)[0]
+
+    hlo = _hlo(scanned, S((64, 64), jnp.float32), S((12, 64, 64), jnp.float32))
+    c = analyze_hlo(hlo)
+    assert c.flops == pytest.approx(12 * 2 * 64**3, rel=0.1)
+
+
+def test_nested_scan_trip_counts_multiply():
+    def nested(x, ws):
+        def outer(c, _):
+            def inner(ci, w):
+                return jnp.dot(ci, w), None
+
+            return jax.lax.scan(inner, c, ws)[0], None
+
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    hlo = _hlo(nested, S((64, 64), jnp.float32), S((5, 64, 64), jnp.float32))
+    c = analyze_hlo(hlo)
+    assert c.flops == pytest.approx(15 * 2 * 64**3, rel=0.1)
+
+
+def test_fft_flops_5nlogn():
+    import math
+
+    hlo = _hlo(lambda v: jnp.fft.fft(v), S((8192,), jnp.complex64))
+    c = analyze_hlo(hlo)
+    assert c.flops == pytest.approx(5 * 8192 * math.log2(8192), rel=0.2)
+
+
+def test_slice_does_not_charge_source():
+    """Slicing 1 row from a big matrix must cost ~row bytes, not matrix bytes."""
+
+    def f(a, i):
+        return jax.lax.dynamic_slice_in_dim(a, i, 1, axis=0) * 2.0
+
+    hlo = _hlo(f, S((4096, 4096), jnp.float32), S((), jnp.int32))
+    c = analyze_hlo(hlo)
+    assert c.bytes < 4096 * 4096 * 4 * 0.1  # far below the full matrix

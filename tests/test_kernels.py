@@ -1,0 +1,208 @@
+"""Per-kernel allclose sweeps vs pure-jnp oracles (interpret=True on CPU)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.banded_conv.ops import blur_apply
+from repro.kernels.banded_conv.ref import banded_circulant_matvec_ref
+from repro.kernels.circulant_matvec.kernel import circulant_matvec_pallas
+from repro.kernels.circulant_matvec.ops import circulant_matvec
+from repro.kernels.circulant_matvec.ref import (
+    circulant_matvec_fft_ref,
+    circulant_matvec_ref,
+)
+from repro.kernels.soft_threshold.ops import fused_admm_update, fused_ista_update
+from repro.kernels.soft_threshold.ref import (
+    admm_threshold_dual_update_ref,
+    ista_threshold_update_ref,
+)
+from repro.kernels.spectral_pointwise.ops import spectral_update
+from repro.kernels.spectral_pointwise.ref import cpadmm_spectral_update_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _tol(want, rel=2e-5):
+    return rel * max(1.0, float(jnp.max(jnp.abs(want))))
+
+
+# ---------------------------------------------------------------------------
+# circulant_matvec: grid/block sweeps, both transposes, both dtypes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block", [(128, 128), (256, 128), (512, 256), (640, 128)])
+@pytest.mark.parametrize("transpose", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_circulant_matvec_shapes(n, block, transpose, dtype):
+    col = jax.random.normal(jax.random.PRNGKey(0), (n,), dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,), dtype)
+    got = circulant_matvec_pallas(col, x, transpose=transpose, block=block)
+    want = circulant_matvec_ref(col, x, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=_tol(want, 1e-4))
+
+
+@pytest.mark.parametrize("use_gather", [True, False])
+def test_circulant_matvec_gather_vs_slices(use_gather):
+    """Both tile-materialization strategies must agree (toolchain fallback)."""
+    n, block = 256, 128
+    col = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    got = circulant_matvec_pallas(col, x, block=block, use_gather=use_gather)
+    want = circulant_matvec_ref(col, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=_tol(want, 1e-4))
+
+
+@hypothesis.given(
+    nblocks=st.integers(1, 6), seed=st.integers(0, 2**16), transpose=st.booleans()
+)
+@hypothesis.settings(**SETTINGS)
+def test_circulant_matvec_property(nblocks, seed, transpose):
+    n = nblocks * 128
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    col = jax.random.normal(k1, (n,))
+    x = jax.random.normal(k2, (n,))
+    got = circulant_matvec_pallas(col, x, transpose=transpose, block=128)
+    want = circulant_matvec_ref(col, x, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=_tol(want, 1e-4))
+
+
+def test_dispatcher_fft_path_matches_direct():
+    n = 512
+    col = jax.random.normal(jax.random.PRNGKey(4), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    d = circulant_matvec(col, x, force="direct")
+    f = circulant_matvec(col, x, force="fft")
+    np.testing.assert_allclose(np.asarray(d), np.asarray(f), atol=_tol(f, 1e-4))
+
+
+def test_fft_ref_matches_dense_ref():
+    n = 384
+    col = jax.random.normal(jax.random.PRNGKey(6), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(7), (n,))
+    np.testing.assert_allclose(
+        np.asarray(circulant_matvec_fft_ref(col, x)),
+        np.asarray(circulant_matvec_ref(col, x)),
+        atol=_tol(circulant_matvec_ref(col, x), 1e-4),
+    )
+
+
+# ---------------------------------------------------------------------------
+# soft_threshold fusions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 1000, 7])  # includes pad paths
+@pytest.mark.parametrize("gamma", [0.0, 1e-3, 0.5])
+def test_fused_ista_update(n, gamma):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    d = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.1
+    got = fused_ista_update(x, d, gamma)
+    want = ista_threshold_update_ref(x, d, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@hypothesis.given(
+    n=st.integers(1, 5000), gamma=st.floats(0, 2.0), tau=st.floats(0.1, 1.6),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(**SETTINGS)
+def test_fused_admm_update_property(n, gamma, tau, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n,))
+    nu = jax.random.normal(k2, (n,))
+    z, nu2 = fused_admm_update(x, nu, gamma, tau)
+    zr, nur = admm_threshold_dual_update_ref(x, nu, gamma, tau)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(nu2), np.asarray(nur), atol=1e-6)
+
+
+def test_threshold_kills_small_entries():
+    x = jnp.asarray([0.4, -0.4, 2.0, -2.0])
+    out = fused_ista_update(x, jnp.zeros(4), 0.5)
+    np.testing.assert_allclose(np.asarray(out), [0.0, 0.0, 1.5, -1.5], atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# spectral_pointwise (CPADMM x-update in the Fourier domain)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nf", [129, 512, 1025, 3])
+def test_spectral_update(nf):
+    keys = jax.random.split(jax.random.PRNGKey(0), 6)
+    mk = lambda k: jax.lax.complex(
+        jax.random.normal(k, (nf,)), jax.random.normal(jax.random.fold_in(k, 1), (nf,))
+    )
+    c, vm, zn = mk(keys[0]), mk(keys[1]), mk(keys[2])
+    b = jax.random.uniform(keys[3], (nf,)) + 0.1
+    rho, sigma = 0.7, 0.05
+    got = spectral_update(c, b.astype(jnp.complex64), vm, zn, rho, sigma)
+    want = cpadmm_spectral_update_ref(c, b, vm, zn, rho, sigma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_spectral_update_is_cpadmm_x_update():
+    """End-to-end: irfft(kernel(rfft(...))) == the solver's x-update math."""
+    from repro.core.admm import CpadmmParams, cpadmm_setup, cpadmm_init, cpadmm_step
+    from repro.core.circulant import partial_gaussian_circulant
+
+    n = 256
+    op = partial_gaussian_circulant(jax.random.PRNGKey(0), n, n // 2, normalize=True)
+    y = jax.random.normal(jax.random.PRNGKey(1), (n // 2,))
+    p = CpadmmParams(*(jnp.asarray(v, jnp.float32) for v in (1e-4, 0.1, 0.1, 1.0, 1.0)))
+    const = cpadmm_setup(op, y, p)
+    s = cpadmm_init(op, y)
+    # a couple of reference steps to get a nontrivial state
+    for _ in range(3):
+        s = cpadmm_step(op, const, s, p)
+    # kernel-evaluated x-update
+    vm = jnp.fft.rfft(s.v + s.mu)
+    zn = jnp.fft.rfft(s.z - s.nu)
+    xs = spectral_update(op.circ.spec, const.b_spec.astype(jnp.complex64), vm, zn, p.rho, p.sigma)
+    x_kernel = jnp.fft.irfft(xs, n=n)
+    s_next = cpadmm_step(op, const, s, p)
+    np.testing.assert_allclose(np.asarray(x_kernel), np.asarray(s_next.x), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# banded_conv (Sec. 7 blur stencil)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,order", [(1024, 5), (2048, 3), (4096, 17), (1000, 5)])
+def test_banded_conv(n, order):
+    taps = jax.random.normal(jax.random.PRNGKey(0), (order,))
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    got = blur_apply(taps, x, order=order)
+    want = banded_circulant_matvec_ref(taps, x, order=order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_banded_conv_matches_full_circulant():
+    """Order-L taps == full circulant with zero-padded first row."""
+    from repro.core.circulant import moving_average_blur
+
+    n, order = 1024, 5
+    B = moving_average_blur(n, order)
+    x = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    got = blur_apply(jnp.full((order,), 1.0 / order), x, order=order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(B.matvec(x)), atol=1e-5)
+
+
+@hypothesis.given(
+    nblk=st.integers(1, 4), order=st.integers(1, 32), seed=st.integers(0, 2**16)
+)
+@hypothesis.settings(**SETTINGS)
+def test_banded_conv_property(nblk, order, seed):
+    n = nblk * 1024
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    taps = jax.random.normal(k1, (order,))
+    x = jax.random.normal(k2, (n,))
+    got = blur_apply(taps, x, order=order)
+    want = banded_circulant_matvec_ref(taps, x, order=order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4 * order)

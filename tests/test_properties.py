@@ -1,0 +1,186 @@
+"""Hypothesis property tests on system invariants (assignment (c)).
+
+These pin the algebraic contracts the solvers and substrate rely on —
+anything here breaking means a silent correctness bug elsewhere.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circulant import Circulant, gaussian_circulant, romberg_circulant
+from repro.core.soft_threshold import soft_threshold
+from repro.models.layers import apply_rope, rmsnorm, init_norm
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# soft-threshold: the proximal operator of ||.||_1 (paper Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**16), gamma=st.floats(0.0, 3.0), n=st.integers(1, 200)
+)
+@hypothesis.settings(**SETTINGS)
+def test_soft_threshold_is_nonexpansive_shrinkage(seed, gamma, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n,)) * 3
+    y = jax.random.normal(k2, (n,)) * 3
+    sx, sy = soft_threshold(x, gamma), soft_threshold(y, gamma)
+    # prox operators are firmly non-expansive
+    assert float(jnp.linalg.norm(sx - sy)) <= float(jnp.linalg.norm(x - y)) + 1e-5
+    # shrinkage: |sx| <= |x| elementwise, sign preserved or zeroed
+    assert bool(jnp.all(jnp.abs(sx) <= jnp.abs(x) + 1e-6))
+    assert bool(jnp.all((sx == 0) | (jnp.sign(sx) == jnp.sign(x))))
+    # exact kill zone
+    assert bool(jnp.all(sx[jnp.abs(x) <= gamma] == 0))
+
+
+# ---------------------------------------------------------------------------
+# circulant algebra is a ring homomorphism onto spectra
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(n=st.integers(4, 128), seed=st.integers(0, 2**16))
+@hypothesis.settings(**SETTINGS)
+def test_spectrum_homomorphism(n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    A = gaussian_circulant(k1, n)
+    B = gaussian_circulant(k2, n)
+    # product of circulants -> product of spectra
+    np.testing.assert_allclose(
+        np.asarray(A.compose(B).spec), np.asarray(A.spec * B.spec),
+        rtol=1e-3, atol=1e-2 * float(jnp.max(jnp.abs(A.spec)) * jnp.max(jnp.abs(B.spec))),
+    )
+    # commutativity (circulants always commute)
+    x = jax.random.normal(jax.random.fold_in(k1, 9), (n,))
+    np.testing.assert_allclose(
+        np.asarray(A.matvec(B.matvec(x))),
+        np.asarray(B.matvec(A.matvec(x))),
+        atol=2e-2 * max(1.0, float(jnp.max(jnp.abs(x)))) * float(A.operator_norm() * B.operator_norm()) / n,
+    )
+
+
+@hypothesis.given(n=st.integers(8, 128), seed=st.integers(0, 2**16))
+@hypothesis.settings(**SETTINGS)
+def test_parseval_for_romberg(n, seed):
+    """Unit-spectrum sensing is an isometry: ||Cx|| == ||x||."""
+    C = romberg_circulant(jax.random.PRNGKey(seed), n)
+    x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1), (n,))
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(C.matvec(x))), float(jnp.linalg.norm(x)), rtol=1e-4
+    )
+
+
+@hypothesis.given(n=st.integers(4, 100), seed=st.integers(0, 2**16))
+@hypothesis.settings(**SETTINGS)
+def test_adjoint_identity(n, seed):
+    """<Cx, y> == <x, C^T y> — the identity ISTA's gradient step relies on."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    C = gaussian_circulant(keys[0], n)
+    x = jax.random.normal(keys[1], (n,))
+    y = jax.random.normal(keys[2], (n,))
+    lhs = float(jnp.dot(C.matvec(x), y))
+    rhs = float(jnp.dot(x, C.rmatvec(y)))
+    assert abs(lhs - rhs) <= 1e-3 * (abs(lhs) + abs(rhs) + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# LASSO objective: solver output must not be worse than the zero vector
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(seed=st.integers(0, 2**12))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_solver_beats_zero_solution(seed):
+    from repro.core import RecoveryProblem, partial_gaussian_circulant, solve
+    from repro.core.ista import lasso_objective
+    from repro.data.synthetic import paper_regime, sparse_signal
+
+    n = 128
+    m, k = paper_regime(n)
+    x = sparse_signal(jax.random.PRNGKey(seed), n, k)
+    op = partial_gaussian_circulant(jax.random.PRNGKey(seed + 1), n, m, normalize=True)
+    prob = RecoveryProblem(op=op, y=op.matvec(x), x_true=x)
+    xh, _ = solve(prob, "cpadmm", iters=150, record_every=150, alpha=1e-4, rho=0.01, sigma=0.01)
+    obj_zero = float(lasso_objective(op, prob.y, jnp.zeros_like(xh), 1e-4))
+    obj_hat = float(lasso_objective(op, prob.y, xh, 1e-4))
+    assert obj_hat < obj_zero
+
+
+# ---------------------------------------------------------------------------
+# substrate invariants
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    s=st.integers(1, 32), dh=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**16)
+)
+@hypothesis.settings(**SETTINGS)
+def test_rope_preserves_norms_and_relative_positions(s, dh, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, s, 2, dh))
+    pos = jnp.broadcast_to(jnp.arange(s), (1, s))
+    y = apply_rope(x, pos, 1e4)
+    # rotation: per-position norms preserved
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        rtol=2e-3,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i - j
+    if s >= 3:
+        q = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1), (1, 1, 1, dh))
+        k = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 2), (1, 1, 1, dh))
+        def dot_at(i, j):
+            qi = apply_rope(q, jnp.full((1, 1), i), 1e4)
+            kj = apply_rope(k, jnp.full((1, 1), j), 1e4)
+            return float(jnp.sum(qi * kj))
+        assert abs(dot_at(2, 1) - dot_at(1, 0)) < 1e-3
+
+
+@hypothesis.given(d=st.sampled_from([8, 32, 128]), seed=st.integers(0, 2**16))
+@hypothesis.settings(**SETTINGS)
+def test_rmsnorm_output_scale(d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, d)) * 10
+    p = init_norm(d, jnp.float32)
+    y = rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=2e-2)
+
+
+@hypothesis.given(seed=st.integers(0, 2**12))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_moe_combine_weights_normalized(seed):
+    from repro.configs.registry import smoke_config
+    from repro.models.moe import _routing
+
+    cfg = smoke_config("deepseek_v3_671b")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (24, cfg.d_model))
+    idx, gates, aux = _routing(
+        {"router": jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                                     (cfg.d_model, cfg.n_experts)) * 0.02,
+         "router_bias": jnp.zeros((cfg.n_experts,))},
+        cfg, x,
+    )
+    np.testing.assert_allclose(np.asarray(jnp.sum(gates, axis=-1)), 1.0, atol=1e-3)
+    assert idx.shape == (24, cfg.top_k)
+    assert float(aux) >= 0.99  # balance loss >= 1 at (near-)uniform routing
+
+
+def test_adamw_decreases_quadratic():
+    from repro.optim import adamw
+
+    cfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=1, total_steps=100,
+                            weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adamw.update(params, grads, state, cfg)
+    assert float(loss(params)) < l0 * 0.1

@@ -1,0 +1,176 @@
+"""Solver correctness: ISTA/FISTA/CPISTA, dense ADMM, CPADMM (paper Algs. 1-3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PAPER_TARGET_MSE,
+    RecoveryProblem,
+    densify,
+    partial_gaussian_circulant,
+    partial_romberg_circulant,
+    solve,
+    solve_checkpointed,
+    solve_until,
+)
+from repro.core.circulant import Circulant, PartialCirculant
+from repro.core.ista import lasso_objective
+from repro.data.synthetic import paper_regime, sparse_signal
+
+
+def _normalized_problem(n=256, seed=0, sensing="gaussian"):
+    m, k = paper_regime(n)
+    x = sparse_signal(jax.random.PRNGKey(seed), n, k)
+    if sensing == "gaussian":
+        op = partial_gaussian_circulant(jax.random.PRNGKey(seed + 1), n, m, normalize=True)
+    else:
+        op = partial_romberg_circulant(jax.random.PRNGKey(seed + 1), n, m)
+    y = op.matvec(x)
+    return RecoveryProblem(op=op, y=y, x_true=x)
+
+
+TUNED = dict(alpha=1e-4, rho=0.01, sigma=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Paper Sec. 6 headline: recovery to MSE <= 1e-4 in the m=n/2, k~=n/10 regime
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method,iters", [("cpadmm", 400), ("fista", 600)])
+def test_paper_regime_recovery(method, iters):
+    prob = _normalized_problem()
+    kw = TUNED if method == "cpadmm" else dict(alpha=1e-4)
+    _, tr = solve(prob, method, iters=iters, record_every=iters, **kw)
+    assert float(tr.mse[-1]) < PAPER_TARGET_MSE
+
+
+def test_romberg_sensing_recovers_faster_than_gaussian():
+    """Beyond-paper claim: orthogonal random-convolution sensing needs fewer
+    ISTA iterations for the same MSE (better restricted conditioning)."""
+    budget = 200
+    pg = _normalized_problem(seed=3, sensing="gaussian")
+    pr = _normalized_problem(seed=3, sensing="romberg")
+    _, tg = solve(pg, "ista", iters=budget, record_every=budget, alpha=1e-4)
+    _, trr = solve(pr, "ista", iters=budget, record_every=budget, alpha=1e-4)
+    assert float(trr.mse[-1]) < float(tg.mse[-1])
+
+
+# ---------------------------------------------------------------------------
+# CPISTA == PISTA: identical algorithm, structured representation (Sec. 5.2)
+# ---------------------------------------------------------------------------
+
+
+def test_cpista_matches_dense_pista_trajectory():
+    prob = _normalized_problem(n=128, seed=7)
+    dense_prob = RecoveryProblem(
+        op=densify(prob.op), y=prob.y, x_true=prob.x_true
+    )
+    tau = 0.5  # fixed so both paths use the exact same step size
+    xc, trc = solve(prob, "ista", iters=50, alpha=1e-4, tau=tau, record_every=10)
+    xd, trd = solve(dense_prob, "ista", iters=50, alpha=1e-4, tau=tau, record_every=10)
+    np.testing.assert_allclose(np.asarray(xc), np.asarray(xd), atol=5e-5)
+    np.testing.assert_allclose(
+        np.asarray(trc.objective), np.asarray(trd.objective), rtol=1e-3, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# ISTA descent property (convergence guarantee of Sec. 2.2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["ista", "cpadmm"])
+def test_objective_decreases(method):
+    prob = _normalized_problem(n=128, seed=1)
+    kw = TUNED if method == "cpadmm" else dict(alpha=1e-4)
+    _, tr = solve(prob, method, iters=120, record_every=10, **kw)
+    obj = np.asarray(tr.objective)
+    # ISTA is monotone; ADMM is not but must trend down decisively.
+    if method == "ista":
+        assert (np.diff(obj) <= 1e-5).all()
+    assert obj[-1] < obj[0] * 0.5
+
+
+def test_fista_beats_ista_at_fixed_budget():
+    prob = _normalized_problem(n=256, seed=2)
+    budget = 150
+    _, ti = solve(prob, "ista", iters=budget, record_every=budget, alpha=1e-4)
+    _, tf = solve(prob, "fista", iters=budget, record_every=budget, alpha=1e-4)
+    assert float(tf.mse[-1]) < float(ti.mse[-1])
+
+
+# ---------------------------------------------------------------------------
+# CPADMM and dense ADMM reach the same LASSO minimizer (Algs. 2 vs 3)
+# ---------------------------------------------------------------------------
+
+
+def test_cpadmm_matches_dense_admm_fixed_point():
+    prob = _normalized_problem(n=96, seed=4)
+    dense_prob = RecoveryProblem(op=densify(prob.op), y=prob.y, x_true=prob.x_true)
+    xc, _ = solve(prob, "cpadmm", iters=2500, record_every=2500, **TUNED)
+    xd, _ = solve(dense_prob, "admm", iters=2500, record_every=2500, alpha=1e-4, rho=0.01)
+    oc = float(lasso_objective(prob.op, prob.y, xc, 1e-4))
+    od = float(lasso_objective(prob.op, prob.y, xd, 1e-4))
+    # same minimizer up to solver tolerance
+    np.testing.assert_allclose(np.asarray(xc), np.asarray(xd), atol=2e-3)
+    assert oc == pytest.approx(od, rel=1e-2)
+
+
+def test_cpadmm_state_satisfies_constraints_at_convergence():
+    """At the fixed point the splitting constraints v = Cx and z = x hold."""
+    prob = _normalized_problem(n=128, seed=5)
+    from repro.core.solvers import make_stepper
+
+    stepper = make_stepper(prob, "cpadmm", **TUNED)
+    s = stepper.init()
+    for _ in range(1500):
+        s = stepper.step(s)
+    cx = prob.op.circ.matvec(s.x)
+    assert float(jnp.max(jnp.abs(s.v - cx))) < 5e-3
+    assert float(jnp.max(jnp.abs(s.z - s.x))) < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+def test_solve_until_stops_early():
+    prob = _normalized_problem(n=128, seed=6)
+    x, iters = solve_until(prob, "cpadmm", tol=1e-6, max_iters=4000, **TUNED)
+    assert int(iters) < 4000
+    d = prob.x_true - x
+    assert float(jnp.mean(d * d)) < 1e-3
+
+
+def test_checkpointed_resume_is_exact():
+    """Fault-tolerance invariant: kill-and-resume == uninterrupted run."""
+    prob = _normalized_problem(n=128, seed=8)
+    saved = {}
+
+    def cb(step, state):
+        saved[step] = state
+
+    x_full, _ = solve_checkpointed(prob, "cpadmm", iters=200, chunk=50, save_cb=cb, **TUNED)
+    # resume from the checkpoint taken at step 100
+    x_res, _ = solve_checkpointed(
+        prob, "cpadmm", iters=200, chunk=50, restore=(100, saved[100]), **TUNED
+    )
+    np.testing.assert_allclose(np.asarray(x_full), np.asarray(x_res), atol=1e-6)
+
+
+def test_batched_recovery():
+    """Solvers broadcast over leading batch axes (the data-parallel unit)."""
+    n, batch = 128, 3
+    m, k = paper_regime(n)
+    x = sparse_signal(jax.random.PRNGKey(0), n, k, batch=(batch,))
+    op = partial_gaussian_circulant(jax.random.PRNGKey(1), n, m, normalize=True)
+    y = op.matvec(x)
+    prob = RecoveryProblem(op=op, y=y, x_true=x)
+    xh, tr = solve(prob, "cpadmm", iters=400, record_every=400, **TUNED)
+    assert xh.shape == (batch, n)
+    assert tr.mse.shape == (1, batch)
+    assert (np.asarray(tr.mse[-1]) < 1e-3).all()
