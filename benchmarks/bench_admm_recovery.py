@@ -12,10 +12,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from .common import build_problem, emit, time_fn
+from .common import build_problem, emit, pick, time_fn
 
-SIZES = (1 << 10, 1 << 11, 1 << 12)
-ITERS = 300
+SIZES = pick((1 << 10, 1 << 11, 1 << 12), (1 << 8,))
+ITERS = pick(300, 20)
 TUNED = dict(alpha=1e-4, rho=0.01, sigma=0.01)
 
 

@@ -12,10 +12,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from .common import emit
+from .common import emit, pick
 
-H = W = 128
-ITERS = 600
+H = W = pick(128, 32)
+ITERS = pick(600, 40)
 
 
 def main() -> None:

@@ -6,14 +6,13 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .common import build_problem, emit
+from .common import build_problem, emit, pick
 
-N = 1 << 12
-ITERS = 400
-RECORD = 40
+N = pick(1 << 12, 1 << 8)
+ITERS = pick(400, 40)
+RECORD = pick(40, 10)
 
 
 def main() -> None:

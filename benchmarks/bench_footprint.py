@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from .common import emit
+from .common import emit, pick
 
 DENSE_LIMIT = 1 << 13
 
@@ -17,7 +17,7 @@ DENSE_LIMIT = 1 << 13
 def main() -> None:
     from repro.core import densify, partial_gaussian_circulant
 
-    for logn in (10, 12, 14, 16, 18, 20):
+    for logn in pick((10, 12, 14, 16, 18, 20), (8, 10)):
         n = 1 << logn
         m = n // 2
         op = partial_gaussian_circulant(jax.random.PRNGKey(0), n, m)

@@ -8,9 +8,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import emit, time_fn
+from .common import emit, pick, time_fn
 
-DIM = 1 << 14
+DIM = pick(1 << 14, 1 << 10)
 
 
 def main() -> None:
@@ -28,7 +28,7 @@ def main() -> None:
         jax.random.normal(jax.random.PRNGKey(1), (k,))
     )
 
-    for ratio in (4, 8, 16):
+    for ratio in pick((4, 8, 16), (4, 8)):
         spec, st = make_compressor(jax.random.PRNGKey(7), DIM, ratio=ratio)
         y, e = compress(spec, st, g)
         gh = decode(spec, st, y)[:DIM]

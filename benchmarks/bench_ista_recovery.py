@@ -3,12 +3,11 @@ vs the beyond-paper FISTA; plus the Romberg-sensing conditioning win."""
 
 from __future__ import annotations
 
-import jax
 
-from .common import build_problem, emit, time_fn
+from .common import build_problem, emit, pick, time_fn
 
-SIZES = (1 << 10, 1 << 12, 1 << 14)
-ITERS = 300
+SIZES = pick((1 << 10, 1 << 12, 1 << 14), (1 << 8,))
+ITERS = pick(300, 20)
 
 
 def main() -> None:

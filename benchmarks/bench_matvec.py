@@ -9,12 +9,11 @@ O(bi+bj) per tile vs O(bi*bj))."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from .common import emit, time_fn
+from .common import emit, pick, time_fn
 
-SIZES = (1 << 10, 1 << 12, 1 << 14)
-BLOCK = 128
+SIZES = pick((1 << 10, 1 << 12, 1 << 14), (1 << 8,))
+BLOCK = pick(128, 32)
 
 
 def main() -> None:

@@ -4,12 +4,11 @@ the circulant-vs-dense gap is the portable part)."""
 
 from __future__ import annotations
 
-import jax
 
-from .common import build_problem, emit, time_fn
+from .common import build_problem, emit, pick, time_fn
 
-SIZES = (1 << 10, 1 << 12, 1 << 14)
-ITERS = 100
+SIZES = pick((1 << 10, 1 << 12, 1 << 14), (1 << 8,))
+ITERS = pick(100, 10)
 
 
 def main() -> None:

@@ -1,20 +1,45 @@
-"""Shared benchmark utilities: timing, CSV emission, problem builders."""
+"""Shared benchmark utilities: timing, CSV emission, problem builders.
+
+Smoke mode: when ``REPRO_BENCH_SMOKE`` is set (``benchmarks.run --smoke``),
+``pick`` swaps every suite's problem sizes/iteration counts for tiny ones so
+the whole harness finishes in seconds on a CI CPU.  Smoke numbers are not
+perf data — they only prove every suite still runs end to end and give the
+artifact pipeline something to archive each push.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 import jax
-import jax.numpy as jnp
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
 
 ROWS: List[str] = []
+
+
+def pick(full, smoke):
+    """Suite knob: the full-size value, or the tiny one in smoke mode."""
+    return smoke if SMOKE else full
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row (structured) for the CI artifact."""
+    rows = []
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us), "derived": derived})
+    with open(path, "w") as f:
+        json.dump({"smoke": SMOKE, "rows": rows}, f, indent=1)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

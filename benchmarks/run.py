@@ -1,46 +1,58 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (paper-artifact mapping in
-DESIGN.md Sec. 7).  ``python -m benchmarks.run [--only <name>]``.
+DESIGN.md Sec. 7).
+
+    python -m benchmarks.run [--only <name>] [--smoke] [--json OUT.json]
+
+``--smoke`` swaps every suite to tiny problem sizes (seconds on a CI CPU;
+run-to-completion check, not perf data); ``--json`` additionally writes the
+structured rows — CI uploads ``BENCH_smoke.json`` as the per-push artifact
+that anchors the perf trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
-from . import (
-    bench_admm_recovery,
-    bench_deblur,
-    bench_error_trace,
-    bench_footprint,
-    bench_grad_compression,
-    bench_ista_recovery,
-    bench_matvec,
-    bench_throughput,
+SUITE_NAMES = (
+    "footprint",  # Fig. 3
+    "admm_recovery",  # Fig. 4
+    "ista_recovery",  # Fig. 5
+    "throughput",  # Fig. 6
+    "matvec",  # Fig. 7
+    "error_trace",  # Fig. 8
+    "deblur",  # Sec. 7 / Fig. 9
+    "grad_compression",  # beyond-paper
 )
 
-SUITES = {
-    "footprint": bench_footprint,  # Fig. 3
-    "admm_recovery": bench_admm_recovery,  # Fig. 4
-    "ista_recovery": bench_ista_recovery,  # Fig. 5
-    "throughput": bench_throughput,  # Fig. 6
-    "matvec": bench_matvec,  # Fig. 7
-    "error_trace": bench_error_trace,  # Fig. 8
-    "deblur": bench_deblur,  # Sec. 7 / Fig. 9
-    "grad_compression": bench_grad_compression,  # beyond-paper
-}
+
+def _load_suites():
+    """Import suite modules *after* the smoke env var is settled — their
+    size constants are bound at import time via common.pick."""
+    import importlib
+
+    return {name: importlib.import_module(f"benchmarks.bench_{name}") for name in SUITE_NAMES}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single suite")
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes (CI run-to-completion)")
+    ap.add_argument("--json", default=None, help="also write rows to this JSON file")
     args = ap.parse_args()
+
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    suites = _load_suites()
+    from benchmarks import common
 
     print("name,us_per_call,derived")
     failed = []
-    for name, mod in SUITES.items():
+    for name, mod in suites.items():
         if args.only and name != args.only:
             continue
         try:
@@ -48,6 +60,8 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        common.write_json(args.json)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -12,7 +12,6 @@ checkpoint — byte-identical result to an uninterrupted run.
 
 import argparse
 import os
-import sys
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -24,12 +23,11 @@ if __name__ == "__main__":
 
 import jax  # noqa: E402  (after XLA_FLAGS)
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
 from repro.ckpt import checkpoint as ckpt  # noqa: E402
 from repro.core.circulant import gaussian_circulant  # noqa: E402
 from repro.data.synthetic import paper_regime, sparse_signal  # noqa: E402
+from repro.dist.compat import make_mesh, shard_map  # noqa: E402
 from repro.dist.fft import layout_2d, unlayout_2d  # noqa: E402
 from repro.dist.recovery import (  # noqa: E402
     DistCpadmmParams,
@@ -37,15 +35,13 @@ from repro.dist.recovery import (  # noqa: E402
     dist_cpadmm_step,
     make_dist_spectrum,
 )
-from jax import shard_map  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 
 def main():
     n1, n2 = args.n1, args.n2
     n = n1 * n2
-    mesh = jax.make_mesh((args.devices,), ("model",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh((args.devices,), ("model",))
     m, k = paper_regime(n)
     print(f"n={n} over {args.devices} devices; m={m}, k={k}")
 

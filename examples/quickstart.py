@@ -8,7 +8,6 @@ MSE <= 1e-4 threshold, with the operator stored as a single length-n vector.
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (
     PAPER_TARGET_MSE,

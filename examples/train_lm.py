@@ -12,7 +12,6 @@ uniform baseline ln(vocab) within a few hundred steps.
 
 import argparse
 import dataclasses
-import os
 import time
 
 import jax

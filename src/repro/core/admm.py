@@ -27,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .circulant import Circulant, DenseOperator, PartialCirculant
+from .circulant import DenseOperator, PartialCirculant
 from .soft_threshold import soft_threshold
 
 Array = jax.Array

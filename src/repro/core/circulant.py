@@ -20,12 +20,10 @@ All operators act on the trailing axis and broadcast over leading batch axes.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

@@ -13,7 +13,7 @@ statistically matched starfield (sparse point sources + a few extended blobs,
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

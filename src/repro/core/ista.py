@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .soft_threshold import ista_update, soft_threshold
+from .soft_threshold import ista_update
 
 Array = jax.Array
 

@@ -1,0 +1,31 @@
+"""repro.dist — the multi-device decomposition of the paper's recovery stack.
+
+Module map (paper references are to "GPU-Accelerated Algorithms for
+Compressed Signals Recovery with Application to Astronomical Imagery
+Deblurring", arXiv:1707.02244):
+
+    compat     version-portable shard_map / mesh constructors (jax 0.4.x
+               through current), used by every entry point below and by the
+               subprocess test programs.
+    sharding   logical->physical named-axis sharding rules for the model
+               stack (DEFAULT_RULES, rules_for_arch, activate_rules,
+               constrain, grad_reduce_boundary).  This is the GSPMD side:
+               transformer training shards by annotation.
+    fft        the four-step n = n1 x n2 decomposed FFT (paper Sec. 4's
+               C = F^H diag(spec) F identity, made multi-device): layout_2d /
+               unlayout_2d / freq_flat define the sharded layout; a circulant
+               matvec costs exactly two transpose-collectives
+               (make_distributed_fft, make_distributed_matvec).
+    recovery   CPADMM, paper Alg. 3, over that layout: the spectral inverse
+               B = (rho C^T C + sigma I)^{-1} stays sharded in the frequency
+               domain; dist_cpadmm_step is the paper-faithful 6-transform
+               iteration, dist_cpadmm_step_fused batches it down to two
+               all-to-alls per iteration (make_dist_cpadmm,
+               make_dist_spectrum).
+
+The solvers here must agree with the single-device ``repro.core`` paths —
+tests/test_dist_equiv.py pins the distributed-vs-core CPADMM match, and
+tests/dist_progs/*.py exercise every module on 8 fake devices.
+"""
+
+from . import compat, fft, recovery, sharding  # noqa: F401

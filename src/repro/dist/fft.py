@@ -1,0 +1,209 @@
+"""Distributed four-step FFT: one transpose-collective per transform.
+
+The length-``n`` DFT of the paper's circulant operators is decomposed over
+``n = n1 x n2`` (Bailey's four-step algorithm), laid out as an ``(n1, n2)``
+matrix ``A[j1, j2] = x[j1 + n1*j2]`` and sharded *row-wise* over the mesh's
+model axis.  One forward transform is then
+
+    1. local FFT of length n2 along the rows (axis -1),
+    2. local twiddle multiply  W_n^{j1*k2},
+    3. one all-to-all transpose-collective (rows -> columns), and
+    4. local FFT of length n1 along the columns (axis -2),
+
+yielding the full spectrum ``F[k1, k2] = X[n2*k1 + k2]`` sharded
+*column-wise*.  This is the layout contract used across ``repro.dist``:
+
+    time / signal domain   (..., n1, n2) real     P(model, None)   "rows"
+    frequency domain       (..., n1, n2) complex  P(None, model)   "cols"
+
+A distributed circulant matvec (paper Sec. 4: ``C x = F^H diag(spec) F x``)
+is therefore forward FFT -> *local* pointwise spectrum multiply -> inverse
+FFT: exactly two transpose-collectives and zero other communication, the
+property the per-device hot path of the paper's GPU kernels needs to survive
+sharding (see kernels/banded_conv/kernel.py for the O(nL) banded variant).
+
+Everything operates on the trailing two axes and broadcasts over leading
+batch axes, so the same step functions serve the single-signal test programs
+and the batched production dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .compat import shard_map
+
+Array = jax.Array
+
+MODEL_AXIS = "model"  # default mesh axis the signal is sharded over
+
+
+# --------------------------------------------------------------------------
+# layout: flat <-> (n1, n2)
+# --------------------------------------------------------------------------
+
+
+def layout_2d(x: Array, n1: int, n2: int) -> Array:
+    """Flat signal (..., n) -> four-step layout (..., n1, n2).
+
+    ``A[j1, j2] = x[j1 + n1*j2]``: consecutive samples run down the columns,
+    so row-sharding A gives every device a strided 1/p subset of the signal.
+    """
+    a = x.reshape(x.shape[:-1] + (n2, n1))
+    return jnp.swapaxes(a, -1, -2)
+
+
+def unlayout_2d(a: Array) -> Array:
+    """Inverse of :func:`layout_2d`: (..., n1, n2) -> (..., n)."""
+    n1, n2 = a.shape[-2], a.shape[-1]
+    return jnp.swapaxes(a, -1, -2).reshape(a.shape[:-2] + (n1 * n2,))
+
+
+def freq_flat(F: Array) -> Array:
+    """Spectrum layout -> natural DFT order: ``X[n2*k1 + k2] = F[k1, k2]``.
+
+    For the four-step output this is a plain row-major reshape.
+    """
+    return F.reshape(F.shape[:-2] + (F.shape[-2] * F.shape[-1],))
+
+
+# --------------------------------------------------------------------------
+# per-shard transforms (call inside shard_map; `axis_name` is the mesh axis)
+# --------------------------------------------------------------------------
+
+
+def _phase(num: Array, n) -> Array:
+    """exp(-2*pi*i * num / n) with the integer exponent reduced mod n first
+    (keeps float32 phase accurate for large n1*n2 products)."""
+    ang = (-2.0 * jnp.pi) * ((num % n).astype(jnp.float32) / n)
+    return lax.complex(jnp.cos(ang), jnp.sin(ang))
+
+
+def fft2_local(a: Array, axis_name: str = MODEL_AXIS) -> Array:
+    """Forward four-step FFT of a row-sharded block.
+
+    a: (..., n1/p, n2) complex, rows j1 sharded over ``axis_name``.
+    Returns (..., n1, n2/p): the column-sharded spectrum block.
+    """
+    p = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    n1_loc, n2 = a.shape[-2], a.shape[-1]
+    n = n1_loc * p * n2
+
+    b = jnp.fft.fft(a, axis=-1)  # over j2 (full locally)
+    j1 = idx * n1_loc + jnp.arange(n1_loc)  # global row indices
+    k2 = jnp.arange(n2)
+    b = b * _phase(j1[:, None] * k2[None, :], n)
+    # transpose-collective: split columns, gather rows -> (..., n1, n2/p)
+    b = lax.all_to_all(
+        b, axis_name, split_axis=b.ndim - 1, concat_axis=b.ndim - 2, tiled=True
+    )
+    return jnp.fft.fft(b, axis=-2)  # over j1 (full after the transpose)
+
+
+def ifft2_local(F: Array, axis_name: str = MODEL_AXIS) -> Array:
+    """Inverse four-step FFT of a column-sharded spectrum block.
+
+    F: (..., n1, n2/p) complex, columns k2 sharded over ``axis_name``.
+    Returns (..., n1/p, n2): the row-sharded time-domain block (complex;
+    take the real part for real signals).
+    """
+    p = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    n1, n2_loc = F.shape[-2], F.shape[-1]
+    n = n1 * n2_loc * p
+
+    b = jnp.fft.ifft(F, axis=-2)  # over k1 (full locally)
+    j1 = jnp.arange(n1)
+    k2 = idx * n2_loc + jnp.arange(n2_loc)  # global column indices
+    b = b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
+    b = lax.all_to_all(
+        b, axis_name, split_axis=b.ndim - 2, concat_axis=b.ndim - 1, tiled=True
+    )
+    return jnp.fft.ifft(b, axis=-1)  # over k2 (full after the transpose)
+
+
+def matvec_local(
+    spec: Array, x: Array, axis_name: str = MODEL_AXIS, transpose: bool = False
+) -> Array:
+    """Sharded circulant matvec on local blocks: irfft(spec * fft(x)).
+
+    spec: column-sharded spectrum block (..., n1, n2/p) — from fft2_local of
+    the circulant's first column.  x: row-sharded real block (..., n1/p, n2).
+    ``transpose=True`` applies C^T (conjugate spectrum, real circulant).
+    """
+    f = fft2_local(x.astype(spec.dtype), axis_name)
+    s = jnp.conj(spec) if transpose else spec
+    return jnp.real(ifft2_local(s * f, axis_name))
+
+
+# --------------------------------------------------------------------------
+# global entry points (jitted shard_map wrappers over a concrete mesh)
+# --------------------------------------------------------------------------
+
+
+def row_spec(axis_name: str = MODEL_AXIS) -> P:
+    return P(axis_name, None)
+
+
+def col_spec(axis_name: str = MODEL_AXIS) -> P:
+    return P(None, axis_name)
+
+
+def make_distributed_fft(
+    mesh, n1: int, n2: int, axis_name: str = MODEL_AXIS
+) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
+    """(fft2d, ifft2d) over global (n1, n2) arrays on ``mesh``.
+
+    fft2d maps a row-sharded layout_2d array to its column-sharded spectrum;
+    ifft2d inverts it.  Each costs exactly one all-to-all.
+    """
+    del n1, n2  # shapes are taken from the traced operands
+
+    fwd = jax.jit(
+        shard_map(
+            functools.partial(fft2_local, axis_name=axis_name),
+            mesh=mesh,
+            in_specs=(row_spec(axis_name),),
+            out_specs=col_spec(axis_name),
+            check_vma=False,
+        )
+    )
+    inv = jax.jit(
+        shard_map(
+            functools.partial(ifft2_local, axis_name=axis_name),
+            mesh=mesh,
+            in_specs=(col_spec(axis_name),),
+            out_specs=row_spec(axis_name),
+            check_vma=False,
+        )
+    )
+    return fwd, inv
+
+
+def make_distributed_matvec(mesh, axis_name: str = MODEL_AXIS):
+    """Jitted ``mv(spec2d, x2d, transpose=False)`` over global arrays.
+
+    Two all-to-alls per call (forward + inverse transform); the spectrum
+    multiply is purely local.  ``mv.lower(...)`` exposes the compiled HLO for
+    the collective-structure assertions in tests/dist_progs/fft_prog.py.
+    """
+
+    @functools.partial(jax.jit, static_argnums=2)
+    def mv(spec2d: Array, x2d: Array, transpose: bool = False) -> Array:
+        fn = shard_map(
+            functools.partial(matvec_local, axis_name=axis_name, transpose=transpose),
+            mesh=mesh,
+            in_specs=(col_spec(axis_name), row_spec(axis_name)),
+            out_specs=row_spec(axis_name),
+            check_vma=False,
+        )
+        return fn(spec2d, x2d)
+
+    return mv

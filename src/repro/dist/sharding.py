@@ -1,0 +1,192 @@
+"""Named-axis sharding rules: logical model axes -> physical mesh axes.
+
+The models (``repro.models.*``) annotate activations with *logical* axis
+names ("batch", "heads", "mlp", ...).  This module owns the mapping from
+those names to the physical mesh axes ("pod", "data", "model") and exposes:
+
+    DEFAULT_RULES        the production mapping (TP on "model", DP over
+                         ("pod", "data"), FSDP for the MoE expert case)
+    rules_for_arch       per-arch copy of DEFAULT_RULES with non-divisible
+                         shardings dropped (a 4-kv-head model on a 16-way
+                         model axis falls back to replication, recorded by
+                         the dry-run as a rule fallback)
+    activate_rules       context manager that makes (rules, mesh) current;
+                         while active, ``constrain`` emits real
+                         with_sharding_constraint ops
+    constrain            logical-axis sharding constraint; identity when no
+                         rules are active so single-device smoke tests and
+                         kernel oracles are untouched
+    grad_reduce_boundary identity in the forward pass; in the backward pass
+                         re-constrains the activation cotangent at the layer
+                         boundary so GSPMD materializes the gradient
+                         all-reduce there (once per layer) instead of
+                         deferring it into the optimizer
+
+Nothing here imports the FFT/recovery layer; ``repro.launch.partition``
+builds parameter/batch/cache NamedShardings on top of these rules.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> physical mesh axes.  Tuples are resolved against the axes
+# actually present in the mesh (so ("pod", "data") degrades to ("data",) on a
+# single-pod mesh).  ``None`` = replicated.
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),  # data parallelism over pod x data
+    "seq": None,  # sequence parallelism off by default
+    "embed": None,  # activations replicated along d_model
+    "vocab": "model",  # embedding/unembedding rows (Megatron-style)
+    "heads": "model",  # attention TP on the head-flat dim
+    "kv_heads": "model",
+    "mlp": "model",  # feed-forward TP on d_ff
+    "experts": "model",  # expert parallelism on the expert dim
+    "fsdp": "data",  # MoE weight FSDP on d_model (the 671B case)
+    "ssm_inner": "model",  # mamba/xlstm inner projections
+}
+
+# Logical axes whose shardability depends on a model dimension, and the
+# config field that dimension comes from (see ``rules_for_arch``).
+_DIVISIBILITY = (
+    ("vocab", lambda cfg: cfg.vocab_padded),
+    ("heads", lambda cfg: cfg.n_heads),
+    ("kv_heads", lambda cfg: cfg.n_kv_heads),
+    ("mlp", lambda cfg: cfg.d_ff),
+    ("experts", lambda cfg: cfg.n_experts),
+    ("fsdp", lambda cfg: cfg.d_model),
+    ("ssm_inner", lambda cfg: cfg.d_ssm_inner),
+)
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _extent(mesh: Mesh, phys) -> int:
+    """Total device count behind a physical-axis assignment (present axes only)."""
+    if phys is None:
+        return 1
+    sizes = _mesh_sizes(mesh)
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(phys, 1)
+
+
+def rules_for_arch(cfg, mesh: Mesh) -> Dict[str, Any]:
+    """DEFAULT_RULES specialized to one architecture on one mesh.
+
+    Any logical axis whose model dimension does not divide the mesh extent it
+    would shard over falls back to replication (``None``).  The dry-run
+    records exactly these fallbacks by diffing against DEFAULT_RULES.
+    """
+    rules = dict(DEFAULT_RULES)
+    for logical, dim_of in _DIVISIBILITY:
+        phys = rules.get(logical)
+        extent = _extent(mesh, phys)
+        dim = dim_of(cfg)
+        if extent > 1 and (dim == 0 or dim % extent != 0):
+            rules[logical] = None
+    return rules
+
+
+def resolve_axis(logical: Optional[str], rules: Dict[str, Any], names: Tuple[str, ...]):
+    """Logical name -> physical axis (or tuple) restricted to present axes."""
+    if logical is None:
+        return None
+    phys = rules.get(logical)
+    if phys is None:
+        return None
+    if isinstance(phys, tuple):
+        present = tuple(a for a in phys if a in names)
+        return present if len(present) > 1 else (present[0] if present else None)
+    return phys if phys in names else None
+
+
+# --------------------------------------------------------------------------
+# active-rules context
+# --------------------------------------------------------------------------
+
+_ACTIVE: list = []  # stack of (rules, mesh)
+
+
+@contextlib.contextmanager
+def activate_rules(rules: Dict[str, Any], mesh: Mesh):
+    """Make (rules, mesh) current for ``constrain``/``grad_reduce_boundary``.
+
+    Tracing (jit/lower) must happen inside this context for the constraints
+    to be emitted; outside it every annotation is the identity.
+    """
+    _ACTIVE.append((rules, mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> Tuple[Optional[Dict[str, Any]], Optional[Mesh]]:
+    return _ACTIVE[-1] if _ACTIVE else (None, None)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` (one logical name per dimension) under the active rules.
+
+    Identity when no rules are active, when the rank disagrees (defensive:
+    callers annotate the common layout), or when every axis resolves to
+    replicated.
+    """
+    rules, mesh = current_rules()
+    if rules is None or mesh is None or len(logical_axes) != x.ndim:
+        return x
+    names = tuple(mesh.axis_names)
+    resolved = tuple(resolve_axis(a, rules, names) for a in logical_axes)
+    if all(r is None for r in resolved):
+        return x
+    # drop shardings that do not divide the dimension (uneven GSPMD sharding
+    # is legal but wasteful; replicating matches rules_for_arch's policy)
+    sizes = _mesh_sizes(mesh)
+
+    def ext(r):
+        if r is None:
+            return 1
+        axes = r if isinstance(r, tuple) else (r,)
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 1)
+        return n
+
+    resolved = tuple(
+        r if r is not None and x.shape[i] % ext(r) == 0 else None
+        for i, r in enumerate(resolved)
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))
+
+
+@jax.custom_vjp
+def grad_reduce_boundary(x: jax.Array) -> jax.Array:
+    """Identity marking a layer boundary for gradient reduction.
+
+    With rules active, the backward pass constrains the cotangent to the
+    activation layout, forcing GSPMD to finish the TP partial-sum all-reduce
+    at the boundary (in the layer's compute dtype) rather than accumulating
+    unreduced partials across the scanned stack.
+    """
+    return x
+
+
+def _grb_fwd(x):
+    return x, None
+
+
+def _grb_bwd(_, g):
+    return (constrain(g, "batch", "seq", "embed"),)
+
+
+grad_reduce_boundary.defvjp(_grb_fwd, _grb_bwd)

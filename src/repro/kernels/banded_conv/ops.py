@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import DEFAULT_BLOCK, banded_circulant_matvec
 from .ref import banded_circulant_matvec_ref

@@ -7,9 +7,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 Lowers one CPADMM iteration-block (50 iterations, as the recovery launcher
 runs it) for a large signal sharded over the model axis, with a batch of
 signals over (pod) x data — the cluster-job form of the paper's Sec. 7
-deblurring.  Compares the paper-faithful 6-transform iteration against the
-fused 3-transform variant (dist/recovery.py) — this is the §Perf hillclimb
-cell for the paper's technique.
+deblurring.  Compares the paper-faithful 6-transform iteration (6 all-to-alls)
+against the fused variant (2 batched transforms -> 2 all-to-alls, see
+dist/recovery.py) — this is the §Perf hillclimb cell for the paper's
+technique.
 
     PYTHONPATH=src python -m repro.launch.cs_dryrun [--n1 4096 --n2 4096]
 """
@@ -20,8 +21,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
 
 from repro.dist.recovery import (
     DistCpadmmParams,
@@ -63,10 +65,7 @@ def lower_variant(mesh, n1, n2, batch, iters, fused, axis_name="model"):
     spec_s = SDS((batch, n1, n2), jnp.complex64)
     real_s = SDS((batch, n1, n2), jnp.float32)
     state_s = DistCpadmmState(*(real_s,) * 5)
-    in_sh = jax.tree.map(
-        lambda s: None, (spec_s, spec_s, real_s, real_s, state_s)
-    )  # shardings come from shard_map specs
-    jitted = jax.jit(sm)
+    jitted = jax.jit(sm)  # shardings come from shard_map specs
     lowered = jitted.lower(spec_s, spec_s, real_s, real_s, state_s)
     compiled = lowered.compile()
     return compiled

@@ -80,7 +80,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_path: str) -> dict:
     import jax
 
     from repro.configs.registry import full_config
-    from repro.dist.sharding import activate_rules, rules_for_arch
+    from repro.dist.sharding import DEFAULT_RULES, activate_rules, rules_for_arch
     from repro.launch import partition
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import cell_specs
@@ -132,6 +132,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_path: str) -> dict:
             mem_dict[field] = int(v)
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per module
+        cost = cost[0] if cost else {}
     cost_dict = {
         k: float(v)
         for k, v in cost.items()
@@ -156,9 +158,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_path: str) -> dict:
         "n_devices": int(mesh.devices.size),
         "kind": kind,
         "rules_fallbacks": {
-            k: v
-            for k, v in rules.items()
-            if v != __import__("repro.dist.sharding", fromlist=["DEFAULT_RULES"]).DEFAULT_RULES.get(k)
+            k: v for k, v in rules.items() if v != DEFAULT_RULES.get(k)
         },
         "memory_analysis": mem_dict,
         "cost_analysis": cost_dict,

@@ -42,6 +42,36 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
+def _split_args(text: str) -> List[str]:
+    """Split an operand list on top-level commas only.
+
+    Newer XLA prints operands with inline shapes ("f32[128,64]{1,0} %arg"),
+    so naive ``split(",")`` breaks inside dims/layout brackets.
+    """
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in text:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+def _operand_name(arg: str) -> str:
+    """'f32[2,3]{1,0} %name' | '%name' | 'name' -> 'name'."""
+    return arg.strip().split(" ")[-1].lstrip("%")
+
+
 def _parse_shape(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
     """'(f32[2,3], bf16[4])' or 'f32[2,3]' -> [(dtype, dims), ...]."""
     out = []
@@ -191,7 +221,7 @@ def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> Optional[in
             m = re.search(r"compare\(([^)]*)\)", ins.body)
             if not m:
                 continue
-            args = [a.strip().split(" ")[-1].lstrip("%") for a in m.group(1).split(",")]
+            args = [_operand_name(a) for a in _split_args(m.group(1))]
             got = from_compare(ins.body, [consts.get(a) for a in args])
             if got:
                 return got
@@ -200,7 +230,7 @@ def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> Optional[in
             m = re.search(r"fusion\(([^)]*)\)", ins.body)
             if not (called and m):
                 continue
-            args = [a.strip().split(" ")[-1].lstrip("%") for a in m.group(1).split(",")]
+            args = [_operand_name(a) for a in _split_args(m.group(1))]
             arg_consts = [consts.get(a) for a in args]
             for cn in called:
                 inner = comps.get(cn)
@@ -244,15 +274,13 @@ def _dot_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
     lhs_contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.body)
     if not (m and lhs_contract):
         return 2.0 * out_elems  # degenerate
-    lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
-    # operand text may be "f32[a,b] %name" or "%name"
-    lhs_name = lhs_name.split(" ")[-1].lstrip("%")
+    args = _split_args(m.group(1))
+    lhs_name = _operand_name(args[0]) if args else ""
     lhs_shape_text = shapes.get(lhs_name, "")
     lhs = _parse_shape(lhs_shape_text)
-    if not lhs:
+    if not lhs and args:
         # shape may be inline in the operand text
-        inline = _parse_shape(m.group(1).split(",")[0])
-        lhs = inline
+        lhs = _parse_shape(args[0])
     k = 1
     if lhs:
         dims = lhs[0][1]
@@ -399,13 +427,12 @@ class HloAnalyzer:
         if not m:
             return []
         out = []
-        for arg in m.group(1).split(","):
-            arg = arg.strip()
+        for arg in _split_args(m.group(1)):
             inline = _parse_shape(arg)
             if inline and "[" in arg.split("%")[0]:
                 out.append(float(_nbytes(inline)))
                 continue
-            name = arg.lstrip("%").split(" ")[-1].lstrip("%")
+            name = _operand_name(arg)
             if name in shapes:
                 out.append(float(_nbytes(_parse_shape(shapes[name]))))
         return out
@@ -443,12 +470,8 @@ class HloAnalyzer:
                     if pm:
                         param_idx[iins.name] = int(pm.group(1))
                 am = re.search(rf"{iins.op}\(([^)]*)\)", iins.body)
-                first = (
-                    am.group(1).split(",")[0].strip().lstrip("%").split(" ")[-1].lstrip("%")
-                    if am
-                    else ""
-                )
-                defs[iins.name] = (iins.op, first)
+                first_args = _split_args(am.group(1)) if am else []
+                defs[iins.name] = (iins.op, _operand_name(first_args[0]) if first_args else "")
 
             def trace_to_param(name: str, hops: int = 3):
                 for _ in range(hops):
@@ -472,9 +495,7 @@ class HloAnalyzer:
                     am = re.search(r"dynamic-update-slice\(([^)]*)\)", iins.body)
                     if not am:
                         continue
-                    arglist = [
-                        a.strip().split(" ")[-1].lstrip("%") for a in am.group(1).split(",")
-                    ]
+                    arglist = [_operand_name(a) for a in _split_args(am.group(1))]
                     if len(arglist) < 2:
                         continue
                     dest, update = arglist[0], arglist[1]

@@ -23,7 +23,7 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s

@@ -14,11 +14,9 @@ pipeline, so restart after preemption resumes exactly.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.registry import full_config, smoke_config

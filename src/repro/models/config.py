@@ -9,7 +9,7 @@ stay simple.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 def _round_up(x: int, mult: int) -> int:

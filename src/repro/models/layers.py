@@ -8,7 +8,6 @@ tests on one CPU device are unaffected).
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,6 @@ Heterogeneous patterns map to segments naturally:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax

@@ -9,8 +9,7 @@ cross-replica gradient mean when ``compress_axis`` names a mesh axis.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

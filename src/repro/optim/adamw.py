@@ -8,7 +8,7 @@ arch in EXPERIMENTS.md §Dry-run memory notes).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

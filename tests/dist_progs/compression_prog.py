@@ -13,23 +13,20 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import shard_map
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.dist.compat import make_mesh, shard_map
 from repro.core.compression import (
-    CompressorSpec,
     compressed_mean,
     compression_wire_bytes,
     identity_wire_bytes,
     make_compressor,
 )
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 DIM = 4096
 RATIO = 8
 spec, state0 = make_compressor(jax.random.PRNGKey(7), DIM, ratio=RATIO, decode_iters=50, alpha=3e-3)

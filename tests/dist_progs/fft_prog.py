@@ -7,8 +7,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.dist.compat import make_mesh
 from repro.dist.fft import (
     freq_flat,
     layout_2d,
@@ -18,7 +18,7 @@ from repro.dist.fft import (
 )
 from repro.core.circulant import gaussian_circulant
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
 n1, n2 = 64, 32
 n = n1 * n2
 

@@ -1,13 +1,15 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.core.circulant import gaussian_circulant
 from repro.data.synthetic import paper_regime, sparse_signal
+from repro.dist.compat import make_mesh
 from repro.dist.fft import layout_2d, unlayout_2d
 from repro.dist.recovery import make_dist_cpadmm, make_dist_spectrum
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
 n1, n2 = 32, 32
 n = n1*n2
 m, k = paper_regime(n)

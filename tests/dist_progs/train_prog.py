@@ -8,12 +8,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.registry import smoke_config
+from repro.dist.compat import make_mesh
 from repro.dist.sharding import activate_rules, rules_for_arch
 from repro.launch.partition import batch_shardings, train_state_shardings
 from repro.models import steps
@@ -22,7 +21,7 @@ from repro.optim.adamw import AdamWConfig
 cfg = smoke_config("codeqwen15_7b")
 opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=2, total_steps=10)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = rules_for_arch(cfg, mesh)
 
 B, S = 8, 32
@@ -71,7 +70,7 @@ print("param sharding OK")
 # ---- checkpoint on (2,4), elastic restore onto (4,2)
 tmp = tempfile.mkdtemp()
 ckpt.save(tmp, 1, jax.device_get(new_state))
-mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh2 = make_mesh((4, 2), ("data", "model"))
 rules2 = rules_for_arch(cfg, mesh2)
 state_sh2 = train_state_shardings(mesh2, state_shape, rules2)
 step_no, restored = ckpt.restore(tmp, None, state_shape, state_sh2)

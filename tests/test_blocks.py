@@ -10,7 +10,6 @@ from repro.configs.registry import smoke_config
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.config import ModelConfig
 
 
 # ---------------------------------------------------------------------------

@@ -1,16 +1,16 @@
 """Unit + property tests for circulant operator algebra (paper Sec. 4)."""
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep; CI installs it
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.circulant import (
     Circulant,
     DenseOperator,
-    PartialCirculant,
     compose_sensing_blur,
     densify,
     gaussian_circulant,

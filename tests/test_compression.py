@@ -4,7 +4,6 @@ covered by tests/dist_progs/compression_prog.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.compression import (
     compress,

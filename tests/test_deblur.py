@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import RecoveryProblem, solve
-from repro.core.circulant import Circulant, PartialCirculant
+from repro.core.circulant import Circulant
 from repro.core.deblur import (
     blurred_observation,
     build_deblur_problem,

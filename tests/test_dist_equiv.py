@@ -1,0 +1,109 @@
+"""Distributed CPADMM == single-device CPADMM, in-process (fast lane).
+
+The 8-device subprocess programs (tests/dist_progs/) are the real multi-device
+exercise but run in the ``slow`` lane.  This test pins the same numerical
+contract cheaply: the ``repro.dist.recovery`` solver on a 1-device mesh must
+reproduce the ``repro.core.solvers`` CPADMM iterate to tight relative error —
+the sharded code path (shard_map, four-step FFT, spectral inverse) is fully
+exercised; only the collective is trivial.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RecoveryProblem, solve
+from repro.core.circulant import PartialCirculant, gaussian_circulant
+from repro.data.synthetic import paper_regime, sparse_signal
+from repro.dist.compat import make_mesh
+from repro.dist.fft import (
+    freq_flat,
+    layout_2d,
+    make_distributed_fft,
+    make_distributed_matvec,
+    unlayout_2d,
+)
+from repro.dist.recovery import make_dist_cpadmm, make_dist_spectrum
+
+N1, N2 = 32, 16
+N = N1 * N2
+ITERS = 300
+ALPHA, RHO, SIGMA = 1e-4, 0.01, 0.01
+
+
+def _problem():
+    x_true = sparse_signal(jax.random.PRNGKey(0), N, paper_regime(N)[1])
+    C = gaussian_circulant(jax.random.PRNGKey(1), N, normalize=True)
+    m = paper_regime(N)[0]
+    omega = jnp.sort(jax.random.permutation(jax.random.PRNGKey(2), N)[:m])
+    mask = jnp.zeros((N,)).at[omega].set(1.0)
+    return x_true, C, omega, mask
+
+
+def test_four_step_fft_matches_dense_fft():
+    mesh = make_mesh((1,), ("model",))
+    x = jax.random.normal(jax.random.PRNGKey(3), (N,))
+    fft2d, ifft2d = make_distributed_fft(mesh, N1, N2)
+    F = fft2d(layout_2d(x, N1, N2).astype(jnp.complex64))
+    np.testing.assert_allclose(
+        np.asarray(freq_flat(F)),
+        np.asarray(jnp.fft.fft(x.astype(jnp.complex64))),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+    back = jnp.real(ifft2d(F))
+    np.testing.assert_allclose(
+        np.asarray(unlayout_2d(back)), np.asarray(x), atol=1e-5
+    )
+
+
+def test_distributed_matvec_matches_operator():
+    mesh = make_mesh((1,), ("model",))
+    _, C, _, _ = _problem()
+    x = jax.random.normal(jax.random.PRNGKey(4), (N,))
+    fft2d, _ = make_distributed_fft(mesh, N1, N2)
+    spec2d = fft2d(layout_2d(C.col, N1, N2).astype(jnp.complex64))
+    mv = make_distributed_matvec(mesh)
+    np.testing.assert_allclose(
+        np.asarray(unlayout_2d(mv(spec2d, layout_2d(x, N1, N2)))),
+        np.asarray(C.matvec(x)),
+        atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(unlayout_2d(mv(spec2d, layout_2d(x, N1, N2), True))),
+        np.asarray(C.rmatvec(x)),
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_dist_cpadmm_matches_core_solver(fused):
+    """Acceptance gate: <= 1e-5 relative error vs core CPADMM, same problem."""
+    x_true, C, omega, mask = _problem()
+    y = jnp.take(C.matvec(x_true), omega)
+
+    op = PartialCirculant(C, omega.astype(jnp.int32))
+    prob = RecoveryProblem(op=op, y=y, x_true=x_true)
+    x_ref, _ = solve(
+        prob, "cpadmm", iters=ITERS, record_every=ITERS,
+        alpha=ALPHA, rho=RHO, sigma=SIGMA,
+    )
+
+    mesh = make_mesh((1,), ("model",))
+    spec2d = make_dist_spectrum(mesh)(layout_2d(C.col, N1, N2))
+    solver = make_dist_cpadmm(mesh, N1, N2, ITERS, fused=fused)
+    z2d = solver(
+        spec2d,
+        layout_2d(mask, N1, N2),
+        layout_2d(mask * C.matvec(x_true), N1, N2),  # P^T y, full-length
+        jnp.float32(ALPHA),
+        jnp.float32(RHO),
+        jnp.float32(SIGMA),
+    )
+    x_dist = unlayout_2d(z2d)
+
+    rel = float(
+        jnp.linalg.norm(x_dist - x_ref) / (jnp.linalg.norm(x_ref) + 1e-30)
+    )
+    assert rel <= 1e-5, f"fused={fused}: relative error {rel:.2e} > 1e-5"

@@ -18,6 +18,7 @@ HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 
 
+@pytest.mark.slow  # subprocess + 8 fake devices: minutes, not seconds
 @pytest.mark.parametrize("prog", PROGS)
 def test_distributed_prog(prog):
     env = dict(os.environ)

@@ -2,7 +2,6 @@
 attention (interpret mode)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,11 +1,12 @@
 """Per-kernel allclose sweeps vs pure-jnp oracles (interpret=True on CPU)."""
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep; CI installs it
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels.banded_conv.ops import blur_apply
 from repro.kernels.banded_conv.ref import banded_circulant_matvec_ref

@@ -4,13 +4,15 @@ These pin the algebraic contracts the solvers and substrate rely on —
 anything here breaking means a silent correctness bug elsewhere.
 """
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep; CI installs it
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.circulant import Circulant, gaussian_circulant, romberg_circulant
+from repro.core.circulant import gaussian_circulant, romberg_circulant
 from repro.core.soft_threshold import soft_threshold
 from repro.models.layers import apply_rope, rmsnorm, init_norm
 

@@ -15,7 +15,6 @@ from repro.core import (
     solve_checkpointed,
     solve_until,
 )
-from repro.core.circulant import Circulant, PartialCirculant
 from repro.core.ista import lasso_objective
 from repro.data.synthetic import paper_regime, sparse_signal
 
