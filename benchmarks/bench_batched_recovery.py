@@ -1,0 +1,79 @@
+"""Batched multi-signal recovery: per-signal amortization over the data axis.
+
+The paper's workload is off-line recovery of *many* compressed signals
+(Andrecut's GPU speedup comes precisely from recovering signals in
+parallel).  This suite times one batched ``solve`` over B signals sharing a
+single sensing operator against B sequential single-signal solves, and
+reports the per-signal amortization curve — the headline number for the
+batching lever in ROADMAP §Perf.
+
+Also times the batched tolerance driver (``solve_until`` with per-signal
+convergence masks): the batch finishes at the *slowest* signal's iteration
+count, but early finishers freeze — the derived column records the
+min/max per-signal iterations actually spent.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .common import build_problem, emit, pick, time_fn
+
+N = pick(1 << 12, 1 << 8)
+BATCHES = pick((1, 4, 8, 16), (1, 4))
+ITERS = pick(300, 20)
+TUNED = dict(alpha=1e-4, rho=0.01, sigma=0.01)
+
+
+def _batched_problem(n, batch):
+    from repro.core import RecoveryProblem
+    from repro.data.synthetic import paper_regime, sparse_signal
+
+    base = build_problem(n)
+    k = paper_regime(n)[1]
+    x = sparse_signal(jax.random.PRNGKey(7), n, k, batch=(batch,))
+    return RecoveryProblem(op=base.op, y=base.op.matvec(x), x_true=x)
+
+
+def main() -> None:
+    from repro.core import solve, solve_until
+
+    t_single = None
+    for batch in BATCHES:
+        prob = _batched_problem(N, batch)
+
+        def run():
+            return solve(prob, "cpadmm", iters=ITERS, record_every=ITERS, **TUNED)[0]
+
+        t = time_fn(run)
+        per_signal = t / batch
+        if t_single is None:
+            t_single = t
+        emit(
+            f"batched_recovery_n{N}_b{batch}",
+            per_signal,
+            f"total_us={t:.0f};per_signal_us={per_signal:.0f};"
+            f"amortization={t_single * batch / t:.2f}x",
+        )
+
+    # tolerance-driven batch: per-signal convergence masks
+    batch = BATCHES[-1]
+    prob = _batched_problem(N, batch)
+
+    def run_until():
+        x, iters = solve_until(
+            prob, "cpadmm", tol=pick(1e-6, 1e-3), max_iters=ITERS * 4, **TUNED
+        )
+        return x, iters
+
+    t = time_fn(lambda: run_until()[0])
+    iters = jax.device_get(run_until()[1])
+    emit(
+        f"batched_solve_until_n{N}_b{batch}",
+        t / batch,
+        f"total_us={t:.0f};iters_min={int(iters.min())};iters_max={int(iters.max())}",
+    )
+
+
+if __name__ == "__main__":
+    main()

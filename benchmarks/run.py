@@ -27,6 +27,7 @@ SUITE_NAMES = (
     "error_trace",  # Fig. 8
     "deblur",  # Sec. 7 / Fig. 9
     "grad_compression",  # beyond-paper
+    "batched_recovery",  # beyond-paper: data-axis batching amortization
 )
 
 

@@ -1,0 +1,90 @@
+"""Multi-frame compressed deblurring: one batched solve for a frame stack.
+
+    PYTHONPATH=src python examples/deblur_multiframe.py [--frames 4 --size 64]
+
+Real astronomical pipelines hand over *stacks* of exposures observed through
+the same optics (Herschel/PACS-style map-making), not lone frames.  This
+example synthesizes F starfield frames, senses them all through one shared
+blur+sensing operator A = P (C B), and recovers the whole stack with a
+single batched CPADMM solve — the solvers broadcast over the leading frame
+axis, so the per-frame cost amortizes exactly like the batched recovery
+benchmark.  Per-frame PSNR / error metrics and PGM renders come out per
+frame.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RecoveryProblem, solve
+from repro.core.deblur import (
+    blurred_observation,
+    build_multiframe_deblur_problem,
+    deblur_metrics,
+    recovered_image,
+)
+from repro.data.synthetic import starfield
+
+
+def save_pgm(path: str, img) -> None:
+    arr = np.asarray(jnp.clip(img, 0, 1) * 255).astype(np.uint8)
+    h, w = arr.shape
+    with open(path, "wb") as f:
+        f.write(f"P5 {w} {h} 255\n".encode())
+        f.write(arr.tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=4)
+    ap.add_argument("--size", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=600)
+    ap.add_argument("--blur-order", type=int, default=5)
+    ap.add_argument("--out", default="artifacts/deblur_multiframe")
+    args = ap.parse_args()
+
+    frames = jnp.stack(
+        [starfield(jax.random.PRNGKey(i), args.size, args.size, density=0.10, n_blobs=6)
+         for i in range(args.frames)]
+    )
+    p = build_multiframe_deblur_problem(
+        jax.random.PRNGKey(100), frames, blur_order=args.blur_order,
+        subsample=0.5, sensing="romberg",
+    )
+    n = args.size * args.size
+    print(f"{args.frames} frames of {args.size}x{args.size} (n={n}), "
+          f"blur L={args.blur_order}, m={p.op.m}, one shared operator")
+
+    prob = RecoveryProblem(
+        op=p.op, y=p.y, x_true=frames.reshape(args.frames, -1)
+    )
+    t0 = time.time()
+    x_hat, _ = solve(prob, "cpadmm", iters=args.iters,
+                     record_every=max(1, args.iters // 4),
+                     alpha=1e-3, rho=0.01, sigma=0.01)
+    x_hat.block_until_ready()
+    wall = time.time() - t0
+
+    m = deblur_metrics(p, x_hat)
+    print(f"recovered the whole stack in {wall:.1f}s / {args.iters} iters "
+          f"({wall / args.frames:.1f}s per frame, one solve)")
+    for f in range(args.frames):
+        print(f"  frame {f}: PSNR {float(m['psnr_db'][f]):.1f} dB   "
+              f"normalized MSE {float(m['normalized_mse'][f]):.2e}")
+
+    os.makedirs(args.out, exist_ok=True)
+    rec = recovered_image(p, x_hat)
+    blur = blurred_observation(p)
+    for f in range(args.frames):
+        save_pgm(os.path.join(args.out, f"frame{f}_original.pgm"), frames[f])
+        save_pgm(os.path.join(args.out, f"frame{f}_blurred.pgm"), blur[f])
+        save_pgm(os.path.join(args.out, f"frame{f}_recovered.pgm"), rec[f])
+    print(f"renders in {args.out}/frame*_{{original,blurred,recovered}}.pgm")
+
+
+if __name__ == "__main__":
+    main()

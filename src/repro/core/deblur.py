@@ -9,6 +9,12 @@ deblurring".
 The paper uses the 1024x1024 Abell-2744 Hubble frame; offline we synthesize a
 statistically matched starfield (sparse point sources + a few extended blobs,
 ~10% nonzero pixels) in ``repro.data.synthetic``.
+
+Multi-frame: real astronomical pipelines hand over *stacks* of frames
+observed through the same optics (Herschel/PACS-style map-making), so
+``build_multiframe_deblur_problem`` senses a (F, H, W) stack through one
+shared operator and every helper here broadcasts over leading frame axes —
+one batched CPADMM solve deblurs the whole stack.
 """
 
 from __future__ import annotations
@@ -34,8 +40,8 @@ Array = jax.Array
 class DeblurProblem(NamedTuple):
     op: PartialCirculant  # A = P (C B): the joint sensing+blur operator
     blur: Circulant  # B alone (for rendering the blurred observation)
-    y: Array  # compressed measurements of the *blurred* image
-    image: Array  # (H, W) ground truth (metrics/rendering only)
+    y: Array  # (..., m) compressed measurements of the *blurred* image(s)
+    image: Array  # (..., H, W) ground truth (metrics/rendering only)
 
 
 def build_deblur_problem(
@@ -67,26 +73,59 @@ def build_deblur_problem(
     return DeblurProblem(op=op, blur=blur, y=y, image=image)
 
 
+def build_multiframe_deblur_problem(
+    key: Array,
+    images: Array,
+    blur_order: int = 5,
+    subsample: float = 0.5,
+    sensing: str = "gaussian",
+) -> DeblurProblem:
+    """Sec. 7 setup for a (F, H, W) frame stack through ONE shared optic.
+
+    All frames see the same blur + sensing operator (the telescope does not
+    change between exposures), so ``y`` is (F, m) and one batched solve
+    recovers the whole stack: build a ``RecoveryProblem`` with the returned
+    op and the batched ``y`` and call ``core.solvers.solve`` as usual.
+    """
+    assert images.ndim >= 3, "expected a (..., F, H, W)-like frame stack"
+    single = build_deblur_problem(
+        key, images.reshape(-1, *images.shape[-2:])[0],
+        blur_order=blur_order, subsample=subsample, sensing=sensing,
+    )
+    n = images.shape[-2] * images.shape[-1]
+    x = images.reshape(images.shape[:-2] + (n,))
+    return DeblurProblem(
+        op=single.op, blur=single.blur, y=single.op.matvec(x), image=images
+    )
+
+
 def blurred_observation(problem: DeblurProblem) -> Array:
-    """The Fig. 9(b) rendering: B x reshaped to the image grid."""
-    h, w = problem.image.shape
-    return problem.blur.matvec(problem.image.reshape(-1)).reshape(h, w)
+    """The Fig. 9(b) rendering: B x reshaped to the image grid(s)."""
+    shape = problem.image.shape
+    flat = problem.image.reshape(shape[:-2] + (-1,))
+    return problem.blur.matvec(flat).reshape(shape)
 
 
 def recovered_image(problem: DeblurProblem, x: Array) -> Array:
-    h, w = problem.image.shape
-    return x.reshape(h, w)
+    return x.reshape(x.shape[:-1] + problem.image.shape[-2:])
 
 
 def deblur_metrics(problem: DeblurProblem, x: Array) -> dict:
-    """Paper Sec. 7 metrics: MSE, normalized MSE, normalized abs error map."""
-    truth = problem.image.reshape(-1)
+    """Paper Sec. 7 metrics + PSNR, per frame over leading batch axes.
+
+    ``x`` is (..., n); each metric comes back with the batch shape (scalars
+    when unbatched).  PSNR uses the ground-truth peak intensity per frame.
+    """
+    shape = problem.image.shape
+    truth = problem.image.reshape(shape[:-2] + (-1,))
     err = truth - x
-    mse = jnp.mean(err * err)
-    scale = jnp.mean(truth * truth) + 1e-12
-    mean_int = jnp.mean(truth) + 1e-12
+    mse = jnp.mean(err * err, axis=-1)
+    scale = jnp.mean(truth * truth, axis=-1) + 1e-12
+    mean_int = jnp.mean(truth, axis=-1) + 1e-12
+    peak = jnp.max(jnp.abs(truth), axis=-1) + 1e-12
     return {
         "mse": mse,
         "normalized_mse": mse / scale,
-        "mean_abs_err_over_mean_intensity": jnp.mean(jnp.abs(err)) / mean_int,
+        "mean_abs_err_over_mean_intensity": jnp.mean(jnp.abs(err), axis=-1) / mean_int,
+        "psnr_db": 10.0 * jnp.log10(peak * peak / (mse + 1e-20)),
     }

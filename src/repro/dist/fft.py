@@ -22,9 +22,33 @@ FFT: exactly two transpose-collectives and zero other communication, the
 property the per-device hot path of the paper's GPU kernels needs to survive
 sharding (see kernels/banded_conv/kernel.py for the O(nL) banded variant).
 
+Half-spectrum (rfft) variant
+----------------------------
+Every operator in the paper is real, so the full complex spectrum is
+redundant: ``X[n - k] = conj(X[k])``.  In the (n1, n2) layout that symmetry
+pairs ``F[k1, k2]`` with ``conj(F[n1-1-k1, n2-k2])`` (k2 >= 1), which means
+the column block ``k2 in [0, n2//2]`` determines everything.  The rfft
+four-step path (:func:`rfft2_local` / :func:`irfft2_local`) therefore
+
+    1. takes a *real* rfft of length n2 along the rows (half the flops),
+    2. twiddles only the kept ``nf = n2//2 + 1`` columns,
+    3. moves only those columns through the all-to-all (half the wire
+       bytes; the column count is zero-padded to a multiple of the mesh
+       size so any device count works), and
+    4. runs the length-n1 column FFT on half as many columns.
+
+The half spectrum lives as ``(..., n1, pad(nf))`` complex, column-sharded —
+same sharding contract as the full path, half the frequency axis.  All the
+Hermitian bookkeeping (which bins are kept, how the discarded half is
+reconstructed) is done here once: :func:`half_to_full` materializes the full
+spectrum for verification, and the pointwise-multiply identity "Hermitian x
+Hermitian = Hermitian" is what lets solvers stay in the half layout
+end to end.
+
 Everything operates on the trailing two axes and broadcasts over leading
-batch axes, so the same step functions serve the single-signal test programs
-and the batched production dry-run.
+batch axes — a leading batch axis sharded over the mesh's *data* axis rides
+the same single all-to-all per transform, so B signals share one collective
+(see make_distributed_rfft / repro.dist.recovery.make_dist_cpadmm).
 """
 
 from __future__ import annotations
@@ -71,6 +95,39 @@ def freq_flat(F: Array) -> Array:
     For the four-step output this is a plain row-major reshape.
     """
     return F.reshape(F.shape[:-2] + (F.shape[-2] * F.shape[-1],))
+
+
+# --------------------------------------------------------------------------
+# half-spectrum (rfft) bookkeeping
+# --------------------------------------------------------------------------
+
+
+def rfft_len(n2: int) -> int:
+    """Kept columns of the half spectrum: k2 in [0, n2//2]."""
+    return n2 // 2 + 1
+
+
+def padded_rfft_len(n2: int, p: int) -> int:
+    """Kept columns zero-padded up to a multiple of the mesh size ``p`` so
+    the transpose-collective can split them evenly on any device count."""
+    nf = rfft_len(n2)
+    return -(-nf // p) * p
+
+
+def half_to_full(Fh: Array, n2: int) -> Array:
+    """Half-spectrum layout (..., n1, >=nf) -> full spectrum (..., n1, n2).
+
+    The discarded columns follow from Hermitian symmetry of the flat DFT,
+    ``X[n - k] = conj(X[k])``: with ``k = n2*k1 + k2`` that reads
+
+        F[k1, k2] = conj(F[n1 - 1 - k1, n2 - k2])    for k2 in [nf, n2).
+
+    Verification/bridging helper — solvers never materialize the full half.
+    """
+    nf = rfft_len(n2)
+    Fh = Fh[..., :nf]
+    tail = jnp.flip(jnp.conj(Fh[..., 1 : n2 - nf + 1]), axis=(-2, -1))
+    return jnp.concatenate([Fh, tail], axis=-1)
 
 
 # --------------------------------------------------------------------------
@@ -129,6 +186,56 @@ def ifft2_local(F: Array, axis_name: str = MODEL_AXIS) -> Array:
     return jnp.fft.ifft(b, axis=-1)  # over k2 (full after the transpose)
 
 
+def rfft2_local(a: Array, axis_name: str = MODEL_AXIS) -> Array:
+    """Forward four-step rfft of a row-sharded *real* block.
+
+    a: (..., n1/p, n2) real, rows j1 sharded over ``axis_name``.
+    Returns (..., n1, pad(nf)/p) complex: the column-sharded half spectrum
+    (kept columns k2 in [0, n2//2], zero-padded to a multiple of p).
+    """
+    p = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    n1_loc, n2 = a.shape[-2], a.shape[-1]
+    n = n1_loc * p * n2
+    nf, nf_pad = rfft_len(n2), padded_rfft_len(n2, p)
+
+    b = jnp.fft.rfft(a, axis=-1)  # over j2: real input, half the flops
+    j1 = idx * n1_loc + jnp.arange(n1_loc)  # global row indices
+    k2 = jnp.arange(nf)
+    b = b * _phase(j1[:, None] * k2[None, :], n)
+    if nf_pad > nf:
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, nf_pad - nf)])
+    # transpose-collective on half as many columns: half the wire bytes
+    b = lax.all_to_all(
+        b, axis_name, split_axis=b.ndim - 1, concat_axis=b.ndim - 2, tiled=True
+    )
+    return jnp.fft.fft(b, axis=-2)  # over j1, on half as many columns
+
+
+def irfft2_local(F: Array, n2: int, axis_name: str = MODEL_AXIS) -> Array:
+    """Inverse four-step rfft of a column-sharded half-spectrum block.
+
+    F: (..., n1, pad(nf)/p) complex, kept columns k2 sharded over
+    ``axis_name``.  ``n2`` is the full signal column count (static — it is
+    not recoverable from the half-spectrum shape).  Returns the row-sharded
+    *real* block (..., n1/p, n2).
+    """
+    p = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    n1, nfp_loc = F.shape[-2], F.shape[-1]
+    n = n1 * n2
+    nf = rfft_len(n2)
+
+    b = jnp.fft.ifft(F, axis=-2)  # over k1 (full locally)
+    j1 = jnp.arange(n1)
+    k2 = idx * nfp_loc + jnp.arange(nfp_loc)  # global kept-column indices
+    b = b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
+    b = lax.all_to_all(
+        b, axis_name, split_axis=b.ndim - 2, concat_axis=b.ndim - 1, tiled=True
+    )
+    return jnp.fft.irfft(b[..., :nf], n=n2, axis=-1)  # drop pad, real out
+
+
 def matvec_local(
     spec: Array, x: Array, axis_name: str = MODEL_AXIS, transpose: bool = False
 ) -> Array:
@@ -143,26 +250,54 @@ def matvec_local(
     return jnp.real(ifft2_local(s * f, axis_name))
 
 
+def rmatvec_local(
+    spec_h: Array, x: Array, axis_name: str = MODEL_AXIS, transpose: bool = False
+) -> Array:
+    """Half-spectrum circulant matvec: same contract as :func:`matvec_local`
+    with ``spec_h`` the column-sharded *half* spectrum from rfft2_local.
+
+    Correct because both operands are spectra of real signals: the pointwise
+    product of Hermitian spectra is Hermitian, so the half layout closes
+    under the multiply and the inverse transform returns the real result.
+    """
+    n2 = x.shape[-1]
+    f = rfft2_local(x, axis_name)
+    s = jnp.conj(spec_h) if transpose else spec_h
+    return irfft2_local(s * f, n2, axis_name)
+
+
 # --------------------------------------------------------------------------
 # global entry points (jitted shard_map wrappers over a concrete mesh)
 # --------------------------------------------------------------------------
 
 
-def row_spec(axis_name: str = MODEL_AXIS) -> P:
+def row_spec(axis_name: str = MODEL_AXIS, batch_axis: str | None = None) -> P:
+    """Signal-domain spec; with ``batch_axis`` the arrays carry a leading
+    batch dimension sharded over the mesh's data axis."""
+    if batch_axis is not None:
+        return P(batch_axis, axis_name, None)
     return P(axis_name, None)
 
 
-def col_spec(axis_name: str = MODEL_AXIS) -> P:
+def col_spec(axis_name: str = MODEL_AXIS, batch_axis: str | None = None) -> P:
+    if batch_axis is not None:
+        return P(batch_axis, None, axis_name)
     return P(None, axis_name)
 
 
 def make_distributed_fft(
-    mesh, n1: int, n2: int, axis_name: str = MODEL_AXIS
+    mesh,
+    n1: int,
+    n2: int,
+    axis_name: str = MODEL_AXIS,
+    batch_axis: str | None = None,
 ) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
     """(fft2d, ifft2d) over global (n1, n2) arrays on ``mesh``.
 
     fft2d maps a row-sharded layout_2d array to its column-sharded spectrum;
-    ifft2d inverts it.  Each costs exactly one all-to-all.
+    ifft2d inverts it.  Each costs exactly one all-to-all.  With
+    ``batch_axis`` the arrays are (B, n1, n2) with B sharded over that mesh
+    axis — the whole batch shares the one collective.
     """
     del n1, n2  # shapes are taken from the traced operands
 
@@ -170,8 +305,8 @@ def make_distributed_fft(
         shard_map(
             functools.partial(fft2_local, axis_name=axis_name),
             mesh=mesh,
-            in_specs=(row_spec(axis_name),),
-            out_specs=col_spec(axis_name),
+            in_specs=(row_spec(axis_name, batch_axis),),
+            out_specs=col_spec(axis_name, batch_axis),
             check_vma=False,
         )
     )
@@ -179,29 +314,72 @@ def make_distributed_fft(
         shard_map(
             functools.partial(ifft2_local, axis_name=axis_name),
             mesh=mesh,
-            in_specs=(col_spec(axis_name),),
-            out_specs=row_spec(axis_name),
+            in_specs=(col_spec(axis_name, batch_axis),),
+            out_specs=row_spec(axis_name, batch_axis),
             check_vma=False,
         )
     )
     return fwd, inv
 
 
-def make_distributed_matvec(mesh, axis_name: str = MODEL_AXIS):
+def make_distributed_rfft(
+    mesh,
+    n1: int,
+    n2: int,
+    axis_name: str = MODEL_AXIS,
+    batch_axis: str | None = None,
+) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
+    """(rfft2d, irfft2d): half-spectrum transforms over real (n1, n2) arrays.
+
+    rfft2d maps a row-sharded real layout_2d array to its column-sharded
+    half spectrum (n1, padded_rfft_len(n2, p)); irfft2d inverts it back to
+    the real signal layout.  Same single all-to-all as the full path, at
+    half the wire bytes and half the local FFT flops.
+    """
+    del n1  # taken from the traced operands; n2 is needed by the inverse
+
+    rfwd = jax.jit(
+        shard_map(
+            functools.partial(rfft2_local, axis_name=axis_name),
+            mesh=mesh,
+            in_specs=(row_spec(axis_name, batch_axis),),
+            out_specs=col_spec(axis_name, batch_axis),
+            check_vma=False,
+        )
+    )
+    rinv = jax.jit(
+        shard_map(
+            functools.partial(irfft2_local, n2=n2, axis_name=axis_name),
+            mesh=mesh,
+            in_specs=(col_spec(axis_name, batch_axis),),
+            out_specs=row_spec(axis_name, batch_axis),
+            check_vma=False,
+        )
+    )
+    return rfwd, rinv
+
+
+def make_distributed_matvec(
+    mesh, axis_name: str = MODEL_AXIS, rfft: bool = False, batch_axis: str | None = None
+):
     """Jitted ``mv(spec2d, x2d, transpose=False)`` over global arrays.
 
     Two all-to-alls per call (forward + inverse transform); the spectrum
-    multiply is purely local.  ``mv.lower(...)`` exposes the compiled HLO for
-    the collective-structure assertions in tests/dist_progs/fft_prog.py.
+    multiply is purely local.  ``rfft=True`` takes the half-spectrum path:
+    ``spec2d`` is then the (n1, pad(nf)) half spectrum from
+    :func:`make_distributed_rfft`'s forward transform.  ``mv.lower(...)``
+    exposes the compiled HLO for the collective-structure assertions in
+    tests/dist_progs/fft_prog.py.
     """
+    local = rmatvec_local if rfft else matvec_local
 
     @functools.partial(jax.jit, static_argnums=2)
     def mv(spec2d: Array, x2d: Array, transpose: bool = False) -> Array:
         fn = shard_map(
-            functools.partial(matvec_local, axis_name=axis_name, transpose=transpose),
+            functools.partial(local, axis_name=axis_name, transpose=transpose),
             mesh=mesh,
-            in_specs=(col_spec(axis_name), row_spec(axis_name)),
-            out_specs=row_spec(axis_name),
+            in_specs=(col_spec(axis_name), row_spec(axis_name, batch_axis)),
+            out_specs=row_spec(axis_name, batch_axis),
             check_vma=False,
         )
         return fn(spec2d, x2d)

@@ -29,8 +29,22 @@ Two step variants:
                             instead of 6.  The soft-threshold and both dual
                             updates collapse into a single elementwise pass.
 
+Both steps take ``rfft=True`` to run on the half-spectrum transforms of
+:mod:`repro.dist.fft` (real iterates, Hermitian spectra): half the local FFT
+flops and half the all-to-all wire bytes per iteration, same all-to-all
+count.  The spectra (``spec``, ``b_spec``) must then be in the half layout
+(from ``make_dist_spectrum(..., rfft=True)``).
+
+Batching over the data axis: every step broadcasts over leading batch axes,
+and ``make_dist_cpadmm(..., batch_axis='data')`` shards a leading batch of B
+signals over the mesh's data axis while the model axis keeps the within-
+signal FFT sharding — all B signals share each transform's single
+all-to-all, which is the Andrecut-style many-signals-at-once form of the
+paper's workload.
+
 Both agree with the single-device solver to float32 roundoff on the same
-problem (tests/test_dist_equiv.py, tests/dist_progs/recovery_prog.py).
+problem (tests/test_dist_equiv.py, tests/dist_progs/recovery_prog.py,
+tests/dist_progs/batched_recovery_prog.py).
 """
 
 from __future__ import annotations
@@ -45,9 +59,33 @@ from jax.sharding import PartitionSpec as P
 from repro.core.soft_threshold import soft_threshold
 
 from .compat import shard_map
-from .fft import MODEL_AXIS, col_spec, fft2_local, ifft2_local, row_spec
+from .fft import (
+    MODEL_AXIS,
+    col_spec,
+    fft2_local,
+    ifft2_local,
+    irfft2_local,
+    rfft2_local,
+    row_spec,
+)
 
 Array = jax.Array
+
+
+def _transforms(rfft: bool, n2: int, cdtype, axis_name: str):
+    """(forward, inverse) local transform pair: real block <-> spectrum block.
+
+    The full-complex pair casts to the spectrum dtype and takes the real
+    part on the way back; the rfft pair stays real-in/real-out in the half
+    layout (``n2`` is the full column count the half spectrum unfolds to).
+    """
+    if rfft:
+        fwd = lambda r: rfft2_local(r, axis_name)
+        inv = lambda F: irfft2_local(F, n2, axis_name)
+    else:
+        fwd = lambda r: fft2_local(r.astype(cdtype), axis_name)
+        inv = lambda F: jnp.real(ifft2_local(F, axis_name))
+    return fwd, inv
 
 
 class DistCpadmmParams(NamedTuple):
@@ -78,16 +116,19 @@ def dist_cpadmm_step(
     state: DistCpadmmState,
     p: DistCpadmmParams,
     axis_name: str = MODEL_AXIS,
+    rfft: bool = False,
 ) -> DistCpadmmState:
     """One paper-faithful Alg. 3 iteration on local shard blocks.
 
-    spec / b_spec: column-sharded spectra of C and B.  d_diag: row-sharded
-    diagonal of (P^T P + rho I)^{-1}.  pty: row-sharded P^T y.  Mirrors
-    ``core.admm.cpadmm_step`` line for line.
+    spec / b_spec: column-sharded spectra of C and B (half layout when
+    ``rfft``).  d_diag: row-sharded diagonal of (P^T P + rho I)^{-1}.
+    pty: row-sharded P^T y.  Mirrors ``core.admm.cpadmm_step`` line for
+    line; broadcasts over leading batch axes.
     """
+    fwd, inv = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name)
 
     def apply(s: Array, r: Array) -> Array:
-        return jnp.real(ifft2_local(s * fft2_local(r.astype(s.dtype), axis_name), axis_name))
+        return inv(s * fwd(r))
 
     # x-update: B (rho C^T (v + mu) + sigma (z - nu))
     rhs = p.rho * apply(jnp.conj(spec), state.v + state.mu) + p.sigma * (
@@ -112,22 +153,24 @@ def dist_cpadmm_step_fused(
     state: DistCpadmmState,
     p: DistCpadmmParams,
     axis_name: str = MODEL_AXIS,
+    rfft: bool = False,
 ) -> DistCpadmmState:
     """Fused Alg. 3 iteration: 2 all-to-alls, one elementwise tail.
 
     The two forward transforms (of v+mu and z-nu) ride one stacked FFT; the
     x-update happens entirely in the frequency domain (B and C^T fuse to one
     local multiply); x and Cx come back through one stacked inverse FFT; the
-    threshold and both dual updates are a single elementwise pass.
+    threshold and both dual updates are a single elementwise pass.  With
+    ``rfft`` the stacked transforms run in the half layout — the x-update
+    multiply is closed there because every factor is a Hermitian spectrum.
+    Broadcasts over leading batch axes (the stack axis leads them).
     """
-    fwd = fft2_local(
-        jnp.stack([state.v + state.mu, state.z - state.nu]).astype(spec.dtype),
-        axis_name,
-    )
+    fwd_t, inv_t = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name)
+    fwd = fwd_t(jnp.stack([state.v + state.mu, state.z - state.nu]))
     w, zf = fwd[0], fwd[1]
     xf = b_spec * (p.rho * jnp.conj(spec) * w + p.sigma * zf)  # spectrum of x
-    inv = ifft2_local(jnp.stack([xf, spec * xf]), axis_name)
-    x, cx = jnp.real(inv[0]), jnp.real(inv[1])
+    inv = inv_t(jnp.stack([xf, spec * xf]))
+    x, cx = inv[0], inv[1]
 
     # fused elementwise tail: v-update, threshold, both dual updates
     v = d_diag * (pty + p.rho * (cx - state.mu))
@@ -142,10 +185,16 @@ def dist_cpadmm_step_fused(
 # --------------------------------------------------------------------------
 
 
-def make_dist_spectrum(mesh, axis_name: str = MODEL_AXIS):
-    """Jitted: row-sharded layout_2d(first column) -> column-sharded spectrum."""
+def make_dist_spectrum(mesh, axis_name: str = MODEL_AXIS, rfft: bool = False):
+    """Jitted: row-sharded layout_2d(first column) -> column-sharded spectrum.
+
+    ``rfft=True`` yields the half-spectrum layout (n1, padded nf columns)
+    that the rfft solver path consumes.
+    """
 
     def to_spec(col2d: Array) -> Array:
+        if rfft:
+            return rfft2_local(col2d, axis_name)
         dt = jnp.complex128 if col2d.dtype == jnp.float64 else jnp.complex64
         return fft2_local(col2d.astype(dt), axis_name)
 
@@ -167,15 +216,27 @@ def make_dist_cpadmm(
     iters: int,
     fused: bool = False,
     axis_name: str = MODEL_AXIS,
+    rfft: bool = False,
+    batch_axis: str | None = None,
 ):
     """Jitted solver(spec2d, mask2d, y2d, alpha, rho, sigma) -> z2d.
 
     spec2d: column-sharded spectrum of the sensing circulant C (from
-    :func:`make_dist_spectrum`).  mask2d: row-sharded 0/1 indicator of the
-    measurement set Omega in the signal layout.  y2d: row-sharded P^T y.
-    Runs ``iters`` scanned iterations from the zero state and returns the
-    sparse iterate z (row-sharded); defaults match the single-device
-    ``core.solvers.solve(..., 'cpadmm')`` path (tau1 = tau2 = 1).
+    :func:`make_dist_spectrum` with the matching ``rfft`` flag).  mask2d:
+    row-sharded 0/1 indicator of the measurement set Omega in the signal
+    layout.  y2d: row-sharded P^T y.  Runs ``iters`` scanned iterations
+    from the zero state and returns the sparse iterate z (row-sharded);
+    defaults match the single-device ``core.solvers.solve(..., 'cpadmm')``
+    path (tau1 = tau2 = 1).
+
+    ``rfft=True`` runs every transform in the half-spectrum layout: same
+    all-to-all count, half the wire bytes and local FFT flops.
+
+    ``batch_axis='data'`` recovers a leading batch of B signals sharded
+    over the mesh's data axis from one call: y2d/z2d become (B, n1, n2)
+    while the operator spectrum and the measurement mask stay shared (one
+    sensing matrix, many signals — the paper's off-line many-recoveries
+    workload).
     """
     del n1, n2  # shapes come from the traced operands
     step = dist_cpadmm_step_fused if fused else dist_cpadmm_step
@@ -195,18 +256,20 @@ def make_dist_cpadmm(
         state = DistCpadmmState(zeros, zeros, zeros, zeros, zeros)
 
         def body(s, _):
-            return step(spec, b_spec, d_diag, pty, s, p, axis_name), None
+            return step(spec, b_spec, d_diag, pty, s, p, axis_name, rfft), None
 
         state, _ = lax.scan(body, state, None, length=iters)
         return state.z
 
-    row, col = row_spec(axis_name), col_spec(axis_name)
+    row = row_spec(axis_name, batch_axis)
+    row_shared = row_spec(axis_name)  # mask: one Omega for the whole batch
+    col = col_spec(axis_name)  # spectrum is shared across the batch
     scalar = P()
     return jax.jit(
         shard_map(
             run,
             mesh=mesh,
-            in_specs=(col, row, row, scalar, scalar, scalar),
+            in_specs=(col, row_shared, row, scalar, scalar, scalar),
             out_specs=row,
             check_vma=False,
         )

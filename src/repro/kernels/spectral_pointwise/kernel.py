@@ -12,7 +12,10 @@ launching 4 separate elementwise ops over HBM (the paper's motivation for
 merging GPU kernels, Sec. 5).
 
 TPU has no complex dtype in Pallas: complex arrays travel as separate
-real/imag planes.  All blocks are 1-D tiles of the half-spectrum.
+real/imag planes.  All blocks are 1-D tiles of the half-spectrum; a leading
+batch axis (B signals through one operator — the batched recovery pipeline)
+becomes the outer grid dimension, with the operator spectra c and b staying
+resident per column-tile while the per-signal streams sweep past them.
 """
 
 from __future__ import annotations
@@ -58,27 +61,44 @@ def cpadmm_spectral_update(
     block: int = DEFAULT_BLOCK,
     interpret: bool = True,
 ):
-    """-> (X_r, X_i): spectrum of the updated x.  All inputs length nf."""
+    """-> (X_r, X_i): spectrum of the updated x.
+
+    Operator spectra (c, b) are length-nf vectors; the per-signal streams
+    (vm, zn) are (nf,) or batched (B, nf) — one shared operator, B signals.
+    """
     nf = c_spec_r.shape[-1]
     pad = (-nf) % block
     if pad:
-        pads = lambda a: jnp.pad(a, (0, pad))
+        pads = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
         c_spec_r, c_spec_i, b_spec = pads(c_spec_r), pads(c_spec_i), pads(b_spec)
         vm_r, vm_i, zn_r, zn_i = pads(vm_r), pads(vm_i), pads(zn_r), pads(zn_i)
     n = c_spec_r.shape[-1]
     rho = jnp.broadcast_to(jnp.asarray(rho, b_spec.dtype), (1,))
     sigma = jnp.broadcast_to(jnp.asarray(sigma, b_spec.dtype), (1,))
-    tile = pl.BlockSpec((block,), lambda i: i)
-    scalar = pl.BlockSpec((1,), lambda i: 0)
+    batched = vm_r.ndim == 2
+    if batched:
+        bsz = vm_r.shape[0]
+        grid = (bsz, n // block)
+        # operator spectra: resident per column-tile, reused across the batch
+        tile_op = pl.BlockSpec((block,), lambda b, i: i)
+        tile_sig = pl.BlockSpec((1, block), lambda b, i: (b, i))
+        scalar = pl.BlockSpec((1,), lambda b, i: 0)
+        out_shape = (bsz, n)
+    else:
+        grid = (n // block,)
+        tile_op = pl.BlockSpec((block,), lambda i: i)
+        tile_sig = tile_op
+        scalar = pl.BlockSpec((1,), lambda i: 0)
+        out_shape = (n,)
     out_r, out_i = pl.pallas_call(
         _kernel,
-        grid=(n // block,),
-        in_specs=[tile] * 7 + [scalar, scalar],
-        out_specs=[tile, tile],
+        grid=grid,
+        in_specs=[tile_op] * 3 + [tile_sig] * 4 + [scalar, scalar],
+        out_specs=[tile_sig, tile_sig],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), b_spec.dtype),
-            jax.ShapeDtypeStruct((n,), b_spec.dtype),
+            jax.ShapeDtypeStruct(out_shape, b_spec.dtype),
+            jax.ShapeDtypeStruct(out_shape, b_spec.dtype),
         ],
         interpret=interpret,
     )(c_spec_r, c_spec_i, b_spec, vm_r, vm_i, zn_r, zn_i, rho, sigma)
-    return out_r[:nf], out_i[:nf]
+    return out_r[..., :nf], out_i[..., :nf]

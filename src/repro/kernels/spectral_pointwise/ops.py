@@ -12,17 +12,28 @@ from .kernel import cpadmm_spectral_update
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def spectral_update(c_spec, b_spec, vm_spec, zn_spec, rho, sigma, *, interpret=True):
-    """Complex-typed public API; internally runs the plane-split Pallas kernel."""
+    """Complex-typed public API; internally runs the plane-split Pallas kernel.
+
+    ``c_spec`` / ``b_spec`` are the shared operator spectra (length nf, any
+    half-spectrum length — n//2+1, odd n, ...); ``vm_spec`` / ``zn_spec``
+    may carry leading batch axes (B signals through one operator), which map
+    to the kernel's outer grid dimension.
+    """
+    batch = vm_spec.shape[:-1]
+    nf = vm_spec.shape[-1]
+    vm = vm_spec.reshape((-1, nf) if batch else (nf,))
+    zn = zn_spec.reshape((-1, nf) if batch else (nf,))
     xr, xi = cpadmm_spectral_update(
         jnp.real(c_spec),
         jnp.imag(c_spec),
         jnp.real(b_spec).astype(jnp.real(c_spec).dtype),
-        jnp.real(vm_spec),
-        jnp.imag(vm_spec),
-        jnp.real(zn_spec),
-        jnp.imag(zn_spec),
+        jnp.real(vm),
+        jnp.imag(vm),
+        jnp.real(zn),
+        jnp.imag(zn),
         rho,
         sigma,
         interpret=interpret,
     )
-    return jax.lax.complex(xr, xi)
+    out = jax.lax.complex(xr, xi)
+    return out.reshape(batch + (nf,))

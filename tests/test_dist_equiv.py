@@ -19,9 +19,13 @@ from repro.data.synthetic import paper_regime, sparse_signal
 from repro.dist.compat import make_mesh
 from repro.dist.fft import (
     freq_flat,
+    half_to_full,
     layout_2d,
     make_distributed_fft,
     make_distributed_matvec,
+    make_distributed_rfft,
+    padded_rfft_len,
+    rfft_len,
     unlayout_2d,
 )
 from repro.dist.recovery import make_dist_cpadmm, make_dist_spectrum
@@ -75,6 +79,107 @@ def test_distributed_matvec_matches_operator():
         np.asarray(C.rmatvec(x)),
         atol=1e-4,
     )
+
+
+# ---------------------------------------------------------------------------
+# rfft half-spectrum parity: new path vs old full-complex path vs jnp.fft,
+# on odd and even n1 x n2 factorizations (the Hermitian bookkeeping's edge
+# cases: odd column counts, Nyquist column present/absent).
+# ---------------------------------------------------------------------------
+
+RFFT_FACTORIZATIONS = [(32, 16), (16, 15), (15, 16), (15, 15), (8, 14)]
+
+
+@pytest.mark.parametrize("n1,n2", RFFT_FACTORIZATIONS)
+def test_rfft_matches_full_complex_and_reference(n1, n2):
+    """Half-spectrum forward == full-complex forward == jnp.fft, 1e-5 rel."""
+    n = n1 * n2
+    mesh = make_mesh((1,), ("model",))
+    x = jax.random.normal(jax.random.PRNGKey(11), (n,))
+    rfft2d, _ = make_distributed_rfft(mesh, n1, n2)
+    fft2d, _ = make_distributed_fft(mesh, n1, n2)
+
+    Fh = rfft2d(layout_2d(x, n1, n2))
+    assert Fh.shape == (n1, padded_rfft_len(n2, 1))
+    full_from_half = freq_flat(half_to_full(Fh, n2))
+    full_old = freq_flat(fft2d(layout_2d(x, n1, n2).astype(jnp.complex64)))
+    ref = jnp.fft.fft(x.astype(jnp.complex64))
+
+    scale = float(jnp.max(jnp.abs(ref)))
+    np.testing.assert_allclose(
+        np.asarray(full_from_half), np.asarray(full_old), atol=1e-5 * scale
+    )
+    np.testing.assert_allclose(
+        np.asarray(full_from_half), np.asarray(ref), atol=1e-5 * scale
+    )
+
+
+@pytest.mark.parametrize("n1,n2", RFFT_FACTORIZATIONS)
+def test_rfft_roundtrip_is_identity(n1, n2):
+    n = n1 * n2
+    mesh = make_mesh((1,), ("model",))
+    x = jax.random.normal(jax.random.PRNGKey(12), (n,))
+    rfft2d, irfft2d = make_distributed_rfft(mesh, n1, n2)
+    back = irfft2d(rfft2d(layout_2d(x, n1, n2)))
+    assert back.dtype == x.dtype  # real in, real out — no complex detour
+    np.testing.assert_allclose(np.asarray(unlayout_2d(back)), np.asarray(x), atol=1e-5)
+
+
+def test_rfft_half_spectrum_column_count():
+    """The half layout keeps n2//2+1 columns (padded to the mesh size)."""
+    assert rfft_len(16) == 9 and rfft_len(15) == 8
+    assert padded_rfft_len(16, 8) == 16 and padded_rfft_len(30, 8) == 16
+    assert padded_rfft_len(16, 1) == 9
+
+
+@pytest.mark.parametrize("transpose", [False, True])
+def test_rfft_matvec_matches_full_and_operator(transpose):
+    mesh = make_mesh((1,), ("model",))
+    _, C, _, _ = _problem()
+    x = jax.random.normal(jax.random.PRNGKey(13), (N,))
+    rfft2d, _ = make_distributed_rfft(mesh, N1, N2)
+    spec_h = rfft2d(layout_2d(C.col, N1, N2))
+    mv_r = make_distributed_matvec(mesh, rfft=True)
+    fft2d, _ = make_distributed_fft(mesh, N1, N2)
+    spec_full = fft2d(layout_2d(C.col, N1, N2).astype(jnp.complex64))
+    mv_c = make_distributed_matvec(mesh)
+
+    got_r = unlayout_2d(mv_r(spec_h, layout_2d(x, N1, N2), transpose))
+    got_c = unlayout_2d(mv_c(spec_full, layout_2d(x, N1, N2), transpose))
+    want = C.rmatvec(x) if transpose else C.matvec(x)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(got_c), atol=1e-5 * scale)
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(want), atol=1e-5 * scale)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_rfft_dist_cpadmm_matches_core_solver(fused):
+    """The half-spectrum solver hits the same 1e-5 gate as the full path."""
+    x_true, C, omega, mask = _problem()
+    y = jnp.take(C.matvec(x_true), omega)
+    op = PartialCirculant(C, omega.astype(jnp.int32))
+    x_ref, _ = solve(
+        RecoveryProblem(op=op, y=y, x_true=x_true),
+        "cpadmm", iters=ITERS, record_every=ITERS,
+        alpha=ALPHA, rho=RHO, sigma=SIGMA,
+    )
+
+    mesh = make_mesh((1,), ("model",))
+    spec_h = make_dist_spectrum(mesh, rfft=True)(layout_2d(C.col, N1, N2))
+    solver = make_dist_cpadmm(mesh, N1, N2, ITERS, fused=fused, rfft=True)
+    z2d = solver(
+        spec_h,
+        layout_2d(mask, N1, N2),
+        layout_2d(mask * C.matvec(x_true), N1, N2),
+        jnp.float32(ALPHA),
+        jnp.float32(RHO),
+        jnp.float32(SIGMA),
+    )
+    x_dist = unlayout_2d(z2d)
+    rel = float(
+        jnp.linalg.norm(x_dist - x_ref) / (jnp.linalg.norm(x_ref) + 1e-30)
+    )
+    assert rel <= 1e-5, f"rfft fused={fused}: relative error {rel:.2e} > 1e-5"
 
 
 @pytest.mark.parametrize("fused", [False, True])

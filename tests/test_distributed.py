@@ -11,6 +11,7 @@ PROGS = [
     "fft_prog.py",
     "recovery_prog.py",
     "fused_recovery_prog.py",
+    "batched_recovery_prog.py",
     "train_prog.py",
     "compression_prog.py",
 ]
