@@ -4,7 +4,12 @@ Paper compares Reference (row-loop), Circulant (shifted-row), CUDA(cuBLAS).
 Here: XLA dense GEMV (the cuBLAS analogue), the FFT circulant path, and the
 direct Pallas kernel in interpret mode (correctness-only on CPU — its
 *structural* HBM-traffic advantage is reported analytically: window reads
-O(bi+bj) per tile vs O(bi*bj))."""
+O(bi+bj) per tile vs O(bi*bj)).
+
+The distributed four-step matvec is timed in both spectrum layouts so the
+rfft half-spectrum lever (PR 2) is visible in the perf trajectory: the
+full-complex path moves n complex bins through two transposes per matvec,
+the rfft path only the kept n//2+1 columns at half the local FFT flops."""
 
 from __future__ import annotations
 
@@ -14,10 +19,20 @@ from .common import emit, pick, time_fn
 
 SIZES = pick((1 << 10, 1 << 12, 1 << 14), (1 << 8,))
 BLOCK = pick(128, 32)
+DIST_N1N2 = pick((128, 128), (16, 16))
 
 
 def main() -> None:
+    import jax.numpy as jnp
+
     from repro.core import gaussian_circulant
+    from repro.dist.compat import make_mesh
+    from repro.dist.fft import (
+        layout_2d,
+        make_distributed_fft,
+        make_distributed_matvec,
+        make_distributed_rfft,
+    )
     from repro.kernels.circulant_matvec.ref import circulant_matvec_fft_ref
 
     for n in SIZES:
@@ -42,6 +57,36 @@ def main() -> None:
             f"hbm_reads_per_tile_circulant={tile_reads_circ};"
             f"traffic_ratio={tile_reads_dense / tile_reads_circ:.0f}x",
         )
+
+    # distributed four-step matvec: full-complex vs rfft half-spectrum
+    n1, n2 = DIST_N1N2
+    n = n1 * n2
+    mesh = make_mesh((1,), ("model",))
+    C = gaussian_circulant(jax.random.PRNGKey(0), n)
+    x2d = layout_2d(jax.random.normal(jax.random.PRNGKey(1), (n,)), n1, n2)
+    col2d = layout_2d(C.col, n1, n2)
+
+    fft2d, _ = make_distributed_fft(mesh, n1, n2)
+    spec_full = fft2d(col2d.astype(jnp.complex64))
+    mv_full = make_distributed_matvec(mesh)
+    t_full = time_fn(mv_full, spec_full, x2d)
+
+    rfft2d, _ = make_distributed_rfft(mesh, n1, n2)
+    spec_half = rfft2d(col2d)
+    mv_half = make_distributed_matvec(mesh, rfft=True)
+    t_half = time_fn(mv_half, spec_half, x2d)
+
+    emit(
+        f"matvec_dist_full_n{n}",
+        t_full,
+        f"spectrum_cols={n2};wire_cols={n2}",
+    )
+    emit(
+        f"matvec_dist_rfft_n{n}",
+        t_half,
+        f"spectrum_cols={n2 // 2 + 1};wire_cols={n2 // 2 + 1};"
+        f"vs_full={t_full / t_half:.2f}x",
+    )
 
 
 if __name__ == "__main__":

@@ -18,7 +18,12 @@ import jax
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
 
-ROWS: List[str] = []
+ROWS: List[dict] = []
+
+# benchmarks.run sets this before each suite's main() so rows carry their
+# suite name into the JSON artifact (benchmarks/compare.py aggregates the
+# regression gate per suite).
+CURRENT_SUITE: str | None = None
 
 
 def pick(full, smoke):
@@ -27,19 +32,21 @@ def pick(full, smoke):
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    row = f"{name},{us_per_call:.1f},{derived}"
-    ROWS.append(row)
-    print(row, flush=True)
+    ROWS.append(
+        {
+            "suite": CURRENT_SUITE or name.split("_", 1)[0],
+            "name": name,
+            "us_per_call": float(f"{us_per_call:.1f}"),
+            "derived": derived,
+        }
+    )
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
 def write_json(path: str) -> None:
     """Dump every emitted row (structured) for the CI artifact."""
-    rows = []
-    for row in ROWS:
-        name, us, derived = row.split(",", 2)
-        rows.append({"name": name, "us_per_call": float(us), "derived": derived})
     with open(path, "w") as f:
-        json.dump({"smoke": SMOKE, "rows": rows}, f, indent=1)
+        json.dump({"smoke": SMOKE, "rows": ROWS}, f, indent=1)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -1,0 +1,108 @@
+"""Perf-trajectory gate: compare a fresh BENCH_smoke.json to the baseline.
+
+First real consumer of the BENCH_* artifact channel: CI's bench-smoke job
+runs every suite at tiny sizes, then this script fails the job when any
+suite's geometric-mean time ratio vs the committed baseline exceeds the
+threshold.  The geomean-per-suite aggregation (rather than per-row) keeps
+the gate robust to single-row jitter on shared CI runners; rows faster than
+``--min-us`` in the baseline are pure dispatch overhead and are skipped.
+
+The baseline was produced on a different machine than the CI runner, so
+every suite's raw ratio carries a common machine-speed factor.  The gate
+therefore normalizes each suite's geomean by the *median* suite geomean
+before thresholding: a uniformly slower runner passes, while one suite
+regressing relative to the fleet fails.  (A regression touching literally
+every suite at once is invisible to this gate by construction — that is
+the price of a committed cross-machine baseline; the raw median is printed
+so gross drift stays observable in the job log.)
+
+New rows/suites (no baseline entry) pass — they start gating once the
+baseline is regenerated.  Rows present in the baseline but missing from the
+fresh run fail: a suite silently dropping a measurement is itself a
+regression.
+
+    python -m benchmarks.compare BENCH_smoke.json \
+        [--baseline benchmarks/baseline_smoke.json] [--threshold 1.25]
+
+Regenerate the baseline after an intentional perf change:
+
+    python -m benchmarks.run --smoke --json benchmarks/baseline_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from collections import defaultdict
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["rows"]}
+
+
+def compare(baseline: dict, fresh: dict, threshold: float, min_us: float):
+    """-> (per-suite geomean ratios, missing row names)."""
+    ratios = defaultdict(list)
+    missing = []
+    for name, base_row in baseline.items():
+        new_row = fresh.get(name)
+        if new_row is None:
+            missing.append(name)  # vanished rows fail regardless of speed
+            continue
+        if base_row["us_per_call"] < min_us:
+            continue  # dispatch-overhead row: pure jitter at smoke sizes
+        suite = base_row.get("suite", name.split("_", 1)[0])
+        ratios[suite].append(
+            max(new_row["us_per_call"], 1e-3) / max(base_row["us_per_call"], 1e-3)
+        )
+    geo = {
+        suite: math.exp(sum(math.log(r) for r in rs) / len(rs))
+        for suite, rs in ratios.items()
+    }
+    return geo, missing
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly produced BENCH_smoke.json")
+    ap.add_argument("--baseline", default="benchmarks/baseline_smoke.json")
+    ap.add_argument(
+        "--threshold", type=float, default=1.25,
+        help="fail when a suite's geomean time ratio exceeds this (1.25 = +25%%)",
+    )
+    ap.add_argument(
+        "--min-us", type=float, default=200.0,
+        help="skip baseline rows faster than this (dispatch-overhead noise)",
+    )
+    args = ap.parse_args()
+
+    geo, missing = compare(
+        load_rows(args.baseline), load_rows(args.fresh), args.threshold, args.min_us
+    )
+    ratios = sorted(geo.values())
+    machine = ratios[len(ratios) // 2] if ratios else 1.0  # median suite ratio
+    print(f"machine-speed factor (median suite geomean): {machine:.2f}x")
+    failed = False
+    for suite in sorted(geo):
+        ratio = geo[suite] / machine
+        verdict = "OK" if ratio <= args.threshold else "REGRESSED"
+        failed |= ratio > args.threshold
+        print(f"{suite:20s} geomean {geo[suite]:5.2f}x  normalized {ratio:5.2f}x  {verdict}")
+    if missing:
+        failed = True
+        print(f"MISSING rows (in baseline, absent from fresh run): {missing}")
+    if failed:
+        print(
+            f"perf gate FAILED (threshold {args.threshold:.2f}x vs "
+            f"{args.baseline})", file=sys.stderr,
+        )
+        sys.exit(1)
+    print(f"perf gate OK (threshold {args.threshold:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ SUITE_NAMES = (
     "deblur",  # Sec. 7 / Fig. 9
     "grad_compression",  # beyond-paper
     "batched_recovery",  # beyond-paper: data-axis batching amortization
+    "overlap",  # beyond-paper: chunked-transpose overlap sweep
 )
 
 
@@ -56,11 +57,13 @@ def main() -> None:
     for name, mod in suites.items():
         if args.only and name != args.only:
             continue
+        common.CURRENT_SUITE = name  # rows emitted from here tag this suite
         try:
             mod.main()
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    common.CURRENT_SUITE = None
     if args.json:
         common.write_json(args.json)
     if failed:

@@ -18,11 +18,17 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--n1", type=int, default=256)
     ap.add_argument("--n2", type=int, default=256)
+    ap.add_argument("--overlap", type=int, default=1,
+                    help="chunked-transpose overlap factor K (1 = monolithic)")
+    ap.add_argument("--tail", default="jnp", choices=("jnp", "pallas"),
+                    help="elementwise iteration tail: XLA-fused jnp ops or "
+                         "the fused cpadmm_tail Pallas kernel")
     args = ap.parse_args()
     os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
 
 import jax  # noqa: E402  (after XLA_FLAGS)
 import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.ckpt import checkpoint as ckpt  # noqa: E402
 from repro.core.circulant import gaussian_circulant  # noqa: E402
@@ -35,7 +41,6 @@ from repro.dist.recovery import (  # noqa: E402
     dist_cpadmm_step,
     make_dist_spectrum,
 )
-from jax.sharding import PartitionSpec as P  # noqa: E402
 
 
 def main():
@@ -64,7 +69,10 @@ def main():
 
     def chunk_fn(spec, bs, dd, pty, state):
         def body(s, _):
-            return dist_cpadmm_step(spec, bs, dd, pty, s, p, "model"), None
+            return dist_cpadmm_step(
+                spec, bs, dd, pty, s, p, "model",
+                overlap=args.overlap, tail=args.tail,
+            ), None
         state, _ = jax.lax.scan(body, state, None, length=50)
         return state
 

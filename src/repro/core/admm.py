@@ -129,6 +129,26 @@ def _apply_spec(spec: Array, x: Array, n: int) -> Array:
     return jnp.fft.irfft(spec * jnp.fft.rfft(x, n=n, axis=-1), n=n, axis=-1)
 
 
+def cpadmm_tail(
+    x: Array, cx: Array, d_diag: Array, pty: Array, mu: Array, nu: Array, p
+) -> tuple:
+    """The elementwise iteration tail shared by every CPADMM variant.
+
+    Everything in Alg. 3 after the two circulant applies (x and Cx) is
+    pointwise: the v-update, the soft-threshold z-update, and both dual
+    updates.  Single- and multi-device steps call this one definition so
+    the jnp path and the fused Pallas kernel (kernels/cpadmm_tail) are
+    pinned against the same math.  ``p`` is any params tuple exposing
+    alpha/rho/sigma/tau1/tau2 (CpadmmParams or DistCpadmmParams).
+    Returns (v, z, mu', nu').
+    """
+    v = d_diag * (pty + p.rho * (cx - mu))
+    z = soft_threshold(x + nu, p.alpha / p.sigma)
+    mu_new = mu + p.tau1 * (v - cx)
+    nu_new = nu + p.tau2 * (x - z)
+    return v, z, mu_new, nu_new
+
+
 def cpadmm_step(
     op: PartialCirculant, const: CpadmmConst, state: CpadmmState, p: CpadmmParams
 ) -> CpadmmState:
@@ -139,6 +159,8 @@ def cpadmm_step(
     v-update:  (P^T P + rho I) v = P^T y + rho (C x - mu)
     z-update:  soft threshold (Alg. 3 line 5)
     duals:     mu += tau1 (v - Cx);  nu += tau2 (x - z)
+    (the last three are :func:`cpadmm_tail` — one fused Pallas pass on the
+    kernel backend, kernels/cpadmm_tail)
     """
     C = op.circ
     n = op.n
@@ -146,12 +168,7 @@ def cpadmm_step(
     x = _apply_spec(const.b_spec, rhs, n)
 
     cx = C.matvec(x)
-    v = const.d_diag * (const.Pty + p.rho * (cx - state.mu))
-
-    z = soft_threshold(x + state.nu, p.alpha / p.sigma)
-
-    mu = state.mu + p.tau1 * (v - cx)
-    nu = state.nu + p.tau2 * (x - z)
+    v, z, mu, nu = cpadmm_tail(x, cx, const.d_diag, const.Pty, state.mu, state.nu, p)
     return CpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)
 
 

@@ -66,7 +66,7 @@ def make_compressor(
     m = max(1, n // ratio)
     kc, ko = jax.random.split(key)
     # Romberg unit-spectrum sensing: orthogonal rows, ISTA step tau = 1 safe.
-    from .circulant import romberg_circulant, random_omega
+    from .circulant import random_omega, romberg_circulant
 
     circ = romberg_circulant(kc, n)
     omega = random_omega(ko, n, m)

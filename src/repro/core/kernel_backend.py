@@ -11,6 +11,8 @@ execution substrate changes:
   * direct circulant matvec      -> kernels.circulant_matvec (time domain)
   * threshold + dual update      -> kernels.soft_threshold   (fused VPU)
   * frequency-domain x-update    -> kernels.spectral_pointwise between rffts
+  * whole elementwise iter tail  -> kernels.cpadmm_tail (v-update + threshold
+                                    + both dual updates, one VMEM pass)
 """
 
 from __future__ import annotations
@@ -18,12 +20,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.circulant_matvec.ops import circulant_matvec
+from repro.kernels.cpadmm_tail.ops import fused_cpadmm_tail
+from repro.kernels.soft_threshold.ops import fused_ista_update
+from repro.kernels.spectral_pointwise.ops import spectral_update
+
 from .admm import CpadmmConst, CpadmmParams, CpadmmState
 from .circulant import PartialCirculant
 from .ista import IstaParams, IstaState
-from repro.kernels.circulant_matvec.ops import circulant_matvec
-from repro.kernels.soft_threshold.ops import fused_admm_update, fused_ista_update
-from repro.kernels.spectral_pointwise.ops import spectral_update
 
 Array = jax.Array
 
@@ -50,7 +54,7 @@ def cpadmm_step_pallas(
     *,
     interpret: bool = True,
 ) -> CpadmmState:
-    """CPADMM iteration: spectral_pointwise x-update + fused threshold/dual."""
+    """CPADMM iteration: spectral_pointwise x-update + one fused tail pass."""
     n = op.n
     vm = jnp.fft.rfft(state.v + state.mu, axis=-1)
     zn = jnp.fft.rfft(state.z - state.nu, axis=-1)
@@ -61,8 +65,10 @@ def cpadmm_step_pallas(
     x = jnp.fft.irfft(x_spec, n=n, axis=-1)
 
     cx = circulant_matvec(op.circ.col, x, interpret=interpret)
-    v = const.d_diag * (const.Pty + p.rho * (cx - state.mu))
-
-    z, nu = fused_admm_update(x, state.nu, p.alpha / p.sigma, p.tau2, interpret=interpret)
-    mu = state.mu + p.tau1 * (v - cx)
+    # the entire elementwise tail (v-update, threshold, both duals) is one
+    # VMEM-resident kernel pass — kernels/cpadmm_tail
+    v, z, mu, nu = fused_cpadmm_tail(
+        x, cx, const.d_diag, const.Pty, state.mu, state.nu,
+        p.rho, p.alpha / p.sigma, p.tau1, p.tau2, interpret=interpret,
+    )
     return CpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)

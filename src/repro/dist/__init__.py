@@ -15,13 +15,16 @@ Deblurring", arXiv:1707.02244):
                C = F^H diag(spec) F identity, made multi-device): layout_2d /
                unlayout_2d / freq_flat define the sharded layout; a circulant
                matvec costs exactly two transpose-collectives
-               (make_distributed_fft, make_distributed_matvec).
+               (make_distributed_fft, make_distributed_matvec).  ``overlap=K``
+               splits each transpose into K chunked all-to-alls overlapped
+               with the first local FFT stage (same bytes, same result).
     recovery   CPADMM, paper Alg. 3, over that layout: the spectral inverse
                B = (rho C^T C + sigma I)^{-1} stays sharded in the frequency
                domain; dist_cpadmm_step is the paper-faithful 6-transform
                iteration, dist_cpadmm_step_fused batches it down to two
                all-to-alls per iteration (make_dist_cpadmm,
-               make_dist_spectrum).
+               make_dist_spectrum); ``tail='pallas'`` runs the elementwise
+               tail as the fused kernels/cpadmm_tail VMEM pass.
 
 The solvers here must agree with the single-device ``repro.core`` paths —
 tests/test_dist_equiv.py pins the distributed-vs-core CPADMM match, and

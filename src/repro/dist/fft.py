@@ -49,6 +49,26 @@ Everything operates on the trailing two axes and broadcasts over leading
 batch axes — a leading batch axis sharded over the mesh's *data* axis rides
 the same single all-to-all per transform, so B signals share one collective
 (see make_distributed_rfft / repro.dist.recovery.make_dist_cpadmm).
+
+Overlapped chunked transpose (``overlap=K``)
+--------------------------------------------
+The monolithic transform serializes [local FFT+twiddle] -> [all-to-all] ->
+[local FFT]: the wire sits idle while the flops run and vice versa.  With
+``overlap=K`` the *non-split* axis of the transpose is cut into K chunks and
+each chunk's all-to-all is issued as soon as that chunk's first-stage
+FFT+twiddle is done — chunk i's collective is in flight while chunk i+1's
+local stage runs, so XLA's async collective scheduler can hide up to
+(K-1)/K of the wire time behind the first-stage compute.
+
+The chunk axis is deliberately the axis the all-to-all does *not* split
+(rows for the forward transform, spectrum columns for the inverse): every
+chunk's collective then delivers bytes to the same device it would land on
+monolithically, and reassembling the K chunk outputs into the monolithic
+layout is a purely local reshape/transpose (``_gather_fwd_chunks`` /
+``_gather_inv_chunks``).  Chunks are zero-padded to equal size so any K
+works on odd extents; the pad rows/columns are sliced off locally before
+the second-stage FFT, so ``overlap=K`` is numerically identical to
+``overlap=1`` (same flops on the same data, reordered).
 """
 
 from __future__ import annotations
@@ -142,56 +162,165 @@ def _phase(num: Array, n) -> Array:
     return lax.complex(jnp.cos(ang), jnp.sin(ang))
 
 
-def fft2_local(a: Array, axis_name: str = MODEL_AXIS) -> Array:
+def _chunk_grid(extent: int, overlap: int) -> Tuple[int, int]:
+    """(chunk_size, n_chunks) cutting ``extent`` items into ~``overlap``
+    equal chunks (the last one zero-padded up to chunk_size by the caller).
+    """
+    k = max(1, min(int(overlap), extent))
+    cs = -(-extent // k)
+    return cs, -(-extent // cs)
+
+
+def _pad_to(x: Array, size: int, axis: int) -> Array:
+    if x.shape[axis] == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, pads)
+
+
+def _fwd_transpose(stage1, a: Array, overlap: int, axis_name: str) -> Array:
+    """Chunked forward transpose-collective with the row axis (-2) chunked.
+
+    ``stage1(chunk, r0)`` maps a row chunk (rows [r0, r0+cs) of the local
+    block ``a``) to its twiddled first-stage output (..., cs, W) with W
+    divisible by the axis size.  Returns the assembled (..., p*n1_loc, W/p)
+    block, identical to the monolithic all-to-all output.  Each chunk's
+    collective depends only on that chunk's stage-1 compute, so chunk i's
+    all-to-all can fly while chunk i+1's FFT+twiddle runs.
+    """
+    n1_loc = a.shape[-2]
+    if overlap <= 1:
+        b = stage1(a, 0)
+        return lax.all_to_all(
+            b, axis_name, split_axis=b.ndim - 1, concat_axis=b.ndim - 2, tiled=True
+        )
+    p = lax.psum(1, axis_name)
+    cs, nch = _chunk_grid(n1_loc, overlap)
+    outs = []
+    for i in range(nch):
+        chunk = _pad_to(a[..., i * cs : min((i + 1) * cs, n1_loc), :], cs, -2)
+        t = stage1(chunk, i * cs)  # pad rows are zero; twiddle keeps them zero
+        outs.append(
+            lax.all_to_all(
+                t, axis_name, split_axis=t.ndim - 1, concat_axis=t.ndim - 2, tiled=True
+            )
+        )
+    return _gather_fwd_chunks(outs, p, cs, n1_loc)
+
+
+def _gather_fwd_chunks(outs, p: int, cs: int, n1_loc: int) -> Array:
+    """Local reassembly of forward chunk outputs into the monolithic layout.
+
+    Chunk i's all-to-all output (..., p*cs, W/p) holds rows ordered
+    device-major (peer d's rows [i*cs, (i+1)*cs) of its local block); the
+    monolithic output orders rows device-major over the *full* local row
+    range.  Interleave the chunks per device and drop the pad rows.
+    """
+    w = outs[0].shape[-1]
+    st = jnp.stack(outs, axis=-3)  # (..., K, p*cs, w)
+    st = st.reshape(st.shape[:-2] + (p, cs, w))  # (..., K, p, cs, w)
+    st = jnp.swapaxes(st, -4, -3)  # (..., p, K, cs, w)
+    st = st.reshape(st.shape[:-3] + (st.shape[-3] * cs,) + (w,))  # (..., p, K*cs, w)
+    st = st[..., :n1_loc, :]  # drop the zero-pad rows (per device)
+    return st.reshape(st.shape[:-3] + (p * n1_loc, w))
+
+
+def _inv_transpose(stage1, F: Array, overlap: int, axis_name: str) -> Array:
+    """Chunked inverse transpose-collective with the column axis (-1) chunked.
+
+    ``stage1(chunk, c0)`` maps a column chunk (columns [c0, c0+cs) of the
+    local spectrum block ``F``) to its twiddled first-stage output
+    (..., n1, cs) with n1 divisible by the axis size.  Returns the assembled
+    (..., n1/p, p*C_loc) block, identical to the monolithic output.
+    """
+    c_loc = F.shape[-1]
+    if overlap <= 1:
+        b = stage1(F, 0)
+        return lax.all_to_all(
+            b, axis_name, split_axis=b.ndim - 2, concat_axis=b.ndim - 1, tiled=True
+        )
+    p = lax.psum(1, axis_name)
+    cs, nch = _chunk_grid(c_loc, overlap)
+    outs = []
+    for i in range(nch):
+        chunk = _pad_to(F[..., :, i * cs : min((i + 1) * cs, c_loc)], cs, -1)
+        t = stage1(chunk, i * cs)  # pad columns are zero and stay zero
+        outs.append(
+            lax.all_to_all(
+                t, axis_name, split_axis=t.ndim - 2, concat_axis=t.ndim - 1, tiled=True
+            )
+        )
+    return _gather_inv_chunks(outs, p, cs, c_loc)
+
+
+def _gather_inv_chunks(outs, p: int, cs: int, c_loc: int) -> Array:
+    """Local reassembly of inverse chunk outputs into the monolithic layout.
+
+    Chunk i's output (..., n1/p, p*cs) holds columns ordered peer-major
+    (peer j's spectrum columns [i*cs, (i+1)*cs)); the monolithic output
+    orders columns peer-major over the full local column range.
+    """
+    st = jnp.stack(outs, axis=-2)  # (..., R, K, p*cs)
+    st = st.reshape(st.shape[:-1] + (p, cs))  # (..., R, K, p, cs)
+    st = jnp.swapaxes(st, -3, -2)  # (..., R, p, K, cs)
+    st = st.reshape(st.shape[:-2] + (st.shape[-2] * cs,))  # (..., R, p, K*cs)
+    st = st[..., :c_loc]  # drop the zero-pad columns (per peer)
+    return st.reshape(st.shape[:-2] + (p * c_loc,))
+
+
+def fft2_local(a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Array:
     """Forward four-step FFT of a row-sharded block.
 
     a: (..., n1/p, n2) complex, rows j1 sharded over ``axis_name``.
     Returns (..., n1, n2/p): the column-sharded spectrum block.
+    ``overlap=K`` cuts the rows into K chunks whose transpose-collectives
+    overlap the first-stage FFT+twiddle (numerically identical output).
     """
     p = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     n1_loc, n2 = a.shape[-2], a.shape[-1]
     n = n1_loc * p * n2
 
-    b = jnp.fft.fft(a, axis=-1)  # over j2 (full locally)
-    j1 = idx * n1_loc + jnp.arange(n1_loc)  # global row indices
-    k2 = jnp.arange(n2)
-    b = b * _phase(j1[:, None] * k2[None, :], n)
-    # transpose-collective: split columns, gather rows -> (..., n1, n2/p)
-    b = lax.all_to_all(
-        b, axis_name, split_axis=b.ndim - 1, concat_axis=b.ndim - 2, tiled=True
-    )
+    def stage1(chunk: Array, r0: int) -> Array:
+        b = jnp.fft.fft(chunk, axis=-1)  # over j2 (full locally)
+        j1 = idx * n1_loc + r0 + jnp.arange(chunk.shape[-2])  # global rows
+        k2 = jnp.arange(n2)
+        return b * _phase(j1[:, None] * k2[None, :], n)
+
+    b = _fwd_transpose(stage1, a, overlap, axis_name)
     return jnp.fft.fft(b, axis=-2)  # over j1 (full after the transpose)
 
 
-def ifft2_local(F: Array, axis_name: str = MODEL_AXIS) -> Array:
+def ifft2_local(F: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Array:
     """Inverse four-step FFT of a column-sharded spectrum block.
 
     F: (..., n1, n2/p) complex, columns k2 sharded over ``axis_name``.
     Returns (..., n1/p, n2): the row-sharded time-domain block (complex;
-    take the real part for real signals).
+    take the real part for real signals).  ``overlap=K`` chunks the columns.
     """
     p = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     n1, n2_loc = F.shape[-2], F.shape[-1]
     n = n1 * n2_loc * p
 
-    b = jnp.fft.ifft(F, axis=-2)  # over k1 (full locally)
-    j1 = jnp.arange(n1)
-    k2 = idx * n2_loc + jnp.arange(n2_loc)  # global column indices
-    b = b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
-    b = lax.all_to_all(
-        b, axis_name, split_axis=b.ndim - 2, concat_axis=b.ndim - 1, tiled=True
-    )
+    def stage1(chunk: Array, c0: int) -> Array:
+        b = jnp.fft.ifft(chunk, axis=-2)  # over k1 (full locally)
+        j1 = jnp.arange(n1)
+        k2 = idx * n2_loc + c0 + jnp.arange(chunk.shape[-1])  # global columns
+        return b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
+
+    b = _inv_transpose(stage1, F, overlap, axis_name)
     return jnp.fft.ifft(b, axis=-1)  # over k2 (full after the transpose)
 
 
-def rfft2_local(a: Array, axis_name: str = MODEL_AXIS) -> Array:
+def rfft2_local(a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Array:
     """Forward four-step rfft of a row-sharded *real* block.
 
     a: (..., n1/p, n2) real, rows j1 sharded over ``axis_name``.
     Returns (..., n1, pad(nf)/p) complex: the column-sharded half spectrum
     (kept columns k2 in [0, n2//2], zero-padded to a multiple of p).
+    ``overlap=K`` chunks the rows as in :func:`fft2_local`.
     """
     p = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
@@ -199,45 +328,49 @@ def rfft2_local(a: Array, axis_name: str = MODEL_AXIS) -> Array:
     n = n1_loc * p * n2
     nf, nf_pad = rfft_len(n2), padded_rfft_len(n2, p)
 
-    b = jnp.fft.rfft(a, axis=-1)  # over j2: real input, half the flops
-    j1 = idx * n1_loc + jnp.arange(n1_loc)  # global row indices
-    k2 = jnp.arange(nf)
-    b = b * _phase(j1[:, None] * k2[None, :], n)
-    if nf_pad > nf:
-        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, nf_pad - nf)])
+    def stage1(chunk: Array, r0: int) -> Array:
+        b = jnp.fft.rfft(chunk, axis=-1)  # over j2: real input, half the flops
+        j1 = idx * n1_loc + r0 + jnp.arange(chunk.shape[-2])  # global rows
+        k2 = jnp.arange(nf)
+        b = b * _phase(j1[:, None] * k2[None, :], n)
+        return _pad_to(b, nf_pad, -1)
+
     # transpose-collective on half as many columns: half the wire bytes
-    b = lax.all_to_all(
-        b, axis_name, split_axis=b.ndim - 1, concat_axis=b.ndim - 2, tiled=True
-    )
+    b = _fwd_transpose(stage1, a, overlap, axis_name)
     return jnp.fft.fft(b, axis=-2)  # over j1, on half as many columns
 
 
-def irfft2_local(F: Array, n2: int, axis_name: str = MODEL_AXIS) -> Array:
+def irfft2_local(
+    F: Array, n2: int, axis_name: str = MODEL_AXIS, overlap: int = 1
+) -> Array:
     """Inverse four-step rfft of a column-sharded half-spectrum block.
 
     F: (..., n1, pad(nf)/p) complex, kept columns k2 sharded over
     ``axis_name``.  ``n2`` is the full signal column count (static — it is
     not recoverable from the half-spectrum shape).  Returns the row-sharded
-    *real* block (..., n1/p, n2).
+    *real* block (..., n1/p, n2).  ``overlap=K`` chunks the kept columns.
     """
-    p = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     n1, nfp_loc = F.shape[-2], F.shape[-1]
     n = n1 * n2
     nf = rfft_len(n2)
 
-    b = jnp.fft.ifft(F, axis=-2)  # over k1 (full locally)
-    j1 = jnp.arange(n1)
-    k2 = idx * nfp_loc + jnp.arange(nfp_loc)  # global kept-column indices
-    b = b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
-    b = lax.all_to_all(
-        b, axis_name, split_axis=b.ndim - 2, concat_axis=b.ndim - 1, tiled=True
-    )
+    def stage1(chunk: Array, c0: int) -> Array:
+        b = jnp.fft.ifft(chunk, axis=-2)  # over k1 (full locally)
+        j1 = jnp.arange(n1)
+        k2 = idx * nfp_loc + c0 + jnp.arange(chunk.shape[-1])  # global columns
+        return b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
+
+    b = _inv_transpose(stage1, F, overlap, axis_name)
     return jnp.fft.irfft(b[..., :nf], n=n2, axis=-1)  # drop pad, real out
 
 
 def matvec_local(
-    spec: Array, x: Array, axis_name: str = MODEL_AXIS, transpose: bool = False
+    spec: Array,
+    x: Array,
+    axis_name: str = MODEL_AXIS,
+    transpose: bool = False,
+    overlap: int = 1,
 ) -> Array:
     """Sharded circulant matvec on local blocks: irfft(spec * fft(x)).
 
@@ -245,13 +378,17 @@ def matvec_local(
     the circulant's first column.  x: row-sharded real block (..., n1/p, n2).
     ``transpose=True`` applies C^T (conjugate spectrum, real circulant).
     """
-    f = fft2_local(x.astype(spec.dtype), axis_name)
+    f = fft2_local(x.astype(spec.dtype), axis_name, overlap)
     s = jnp.conj(spec) if transpose else spec
-    return jnp.real(ifft2_local(s * f, axis_name))
+    return jnp.real(ifft2_local(s * f, axis_name, overlap))
 
 
 def rmatvec_local(
-    spec_h: Array, x: Array, axis_name: str = MODEL_AXIS, transpose: bool = False
+    spec_h: Array,
+    x: Array,
+    axis_name: str = MODEL_AXIS,
+    transpose: bool = False,
+    overlap: int = 1,
 ) -> Array:
     """Half-spectrum circulant matvec: same contract as :func:`matvec_local`
     with ``spec_h`` the column-sharded *half* spectrum from rfft2_local.
@@ -261,9 +398,9 @@ def rmatvec_local(
     under the multiply and the inverse transform returns the real result.
     """
     n2 = x.shape[-1]
-    f = rfft2_local(x, axis_name)
+    f = rfft2_local(x, axis_name, overlap)
     s = jnp.conj(spec_h) if transpose else spec_h
-    return irfft2_local(s * f, n2, axis_name)
+    return irfft2_local(s * f, n2, axis_name, overlap)
 
 
 # --------------------------------------------------------------------------
@@ -291,19 +428,22 @@ def make_distributed_fft(
     n2: int,
     axis_name: str = MODEL_AXIS,
     batch_axis: str | None = None,
+    overlap: int = 1,
 ) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
     """(fft2d, ifft2d) over global (n1, n2) arrays on ``mesh``.
 
     fft2d maps a row-sharded layout_2d array to its column-sharded spectrum;
-    ifft2d inverts it.  Each costs exactly one all-to-all.  With
-    ``batch_axis`` the arrays are (B, n1, n2) with B sharded over that mesh
-    axis — the whole batch shares the one collective.
+    ifft2d inverts it.  Each costs exactly one all-to-all (``overlap=K``
+    splits it into K chunked collectives that overlap the first local FFT
+    stage; same bytes, same result).  With ``batch_axis`` the arrays are
+    (B, n1, n2) with B sharded over that mesh axis — the whole batch shares
+    the one collective.
     """
     del n1, n2  # shapes are taken from the traced operands
 
     fwd = jax.jit(
         shard_map(
-            functools.partial(fft2_local, axis_name=axis_name),
+            functools.partial(fft2_local, axis_name=axis_name, overlap=overlap),
             mesh=mesh,
             in_specs=(row_spec(axis_name, batch_axis),),
             out_specs=col_spec(axis_name, batch_axis),
@@ -312,7 +452,7 @@ def make_distributed_fft(
     )
     inv = jax.jit(
         shard_map(
-            functools.partial(ifft2_local, axis_name=axis_name),
+            functools.partial(ifft2_local, axis_name=axis_name, overlap=overlap),
             mesh=mesh,
             in_specs=(col_spec(axis_name, batch_axis),),
             out_specs=row_spec(axis_name, batch_axis),
@@ -328,19 +468,21 @@ def make_distributed_rfft(
     n2: int,
     axis_name: str = MODEL_AXIS,
     batch_axis: str | None = None,
+    overlap: int = 1,
 ) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
     """(rfft2d, irfft2d): half-spectrum transforms over real (n1, n2) arrays.
 
     rfft2d maps a row-sharded real layout_2d array to its column-sharded
     half spectrum (n1, padded_rfft_len(n2, p)); irfft2d inverts it back to
     the real signal layout.  Same single all-to-all as the full path, at
-    half the wire bytes and half the local FFT flops.
+    half the wire bytes and half the local FFT flops; ``overlap=K`` chunks
+    that collective to overlap it with the first FFT stage.
     """
     del n1  # taken from the traced operands; n2 is needed by the inverse
 
     rfwd = jax.jit(
         shard_map(
-            functools.partial(rfft2_local, axis_name=axis_name),
+            functools.partial(rfft2_local, axis_name=axis_name, overlap=overlap),
             mesh=mesh,
             in_specs=(row_spec(axis_name, batch_axis),),
             out_specs=col_spec(axis_name, batch_axis),
@@ -349,7 +491,7 @@ def make_distributed_rfft(
     )
     rinv = jax.jit(
         shard_map(
-            functools.partial(irfft2_local, n2=n2, axis_name=axis_name),
+            functools.partial(irfft2_local, n2=n2, axis_name=axis_name, overlap=overlap),
             mesh=mesh,
             in_specs=(col_spec(axis_name, batch_axis),),
             out_specs=row_spec(axis_name, batch_axis),
@@ -360,14 +502,19 @@ def make_distributed_rfft(
 
 
 def make_distributed_matvec(
-    mesh, axis_name: str = MODEL_AXIS, rfft: bool = False, batch_axis: str | None = None
+    mesh,
+    axis_name: str = MODEL_AXIS,
+    rfft: bool = False,
+    batch_axis: str | None = None,
+    overlap: int = 1,
 ):
     """Jitted ``mv(spec2d, x2d, transpose=False)`` over global arrays.
 
     Two all-to-alls per call (forward + inverse transform); the spectrum
     multiply is purely local.  ``rfft=True`` takes the half-spectrum path:
     ``spec2d`` is then the (n1, pad(nf)) half spectrum from
-    :func:`make_distributed_rfft`'s forward transform.  ``mv.lower(...)``
+    :func:`make_distributed_rfft`'s forward transform.  ``overlap=K`` runs
+    both transforms with the chunked overlapped transpose.  ``mv.lower(...)``
     exposes the compiled HLO for the collective-structure assertions in
     tests/dist_progs/fft_prog.py.
     """
@@ -376,7 +523,9 @@ def make_distributed_matvec(
     @functools.partial(jax.jit, static_argnums=2)
     def mv(spec2d: Array, x2d: Array, transpose: bool = False) -> Array:
         fn = shard_map(
-            functools.partial(local, axis_name=axis_name, transpose=transpose),
+            functools.partial(
+                local, axis_name=axis_name, transpose=transpose, overlap=overlap
+            ),
             mesh=mesh,
             in_specs=(col_spec(axis_name), row_spec(axis_name, batch_axis)),
             out_specs=row_spec(axis_name, batch_axis),

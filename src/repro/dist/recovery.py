@@ -42,6 +42,17 @@ signal FFT sharding — all B signals share each transform's single
 all-to-all, which is the Andrecut-style many-signals-at-once form of the
 paper's workload.
 
+Two iteration-critical-path knobs ride every step:
+
+    overlap=K   each transform's transpose-collective is split into K
+                chunked all-to-alls overlapped with the first local FFT
+                stage (repro.dist.fft docstring) — same bytes, same result,
+                up to (K-1)/K of the wire hidden behind compute.
+    tail        'jnp' (default) keeps the elementwise tail as XLA-fused
+                jnp ops; 'pallas' routes it through the fused
+                kernels/cpadmm_tail VMEM-resident kernel (one pass for the
+                v-update, soft-threshold, and both dual updates).
+
 Both agree with the single-device solver to float32 roundoff on the same
 problem (tests/test_dist_equiv.py, tests/dist_progs/recovery_prog.py,
 tests/dist_progs/batched_recovery_prog.py).
@@ -56,7 +67,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.soft_threshold import soft_threshold
+from repro.core.admm import cpadmm_tail
 
 from .compat import shard_map
 from .fft import (
@@ -72,20 +83,45 @@ from .fft import (
 Array = jax.Array
 
 
-def _transforms(rfft: bool, n2: int, cdtype, axis_name: str):
+def _transforms(rfft: bool, n2: int, cdtype, axis_name: str, overlap: int = 1):
     """(forward, inverse) local transform pair: real block <-> spectrum block.
 
     The full-complex pair casts to the spectrum dtype and takes the real
     part on the way back; the rfft pair stays real-in/real-out in the half
     layout (``n2`` is the full column count the half spectrum unfolds to).
+    ``overlap`` selects the chunked overlapped transpose in both directions.
     """
     if rfft:
-        fwd = lambda r: rfft2_local(r, axis_name)
-        inv = lambda F: irfft2_local(F, n2, axis_name)
+        fwd = lambda r: rfft2_local(r, axis_name, overlap)
+        inv = lambda F: irfft2_local(F, n2, axis_name, overlap)
     else:
-        fwd = lambda r: fft2_local(r.astype(cdtype), axis_name)
-        inv = lambda F: jnp.real(ifft2_local(F, axis_name))
+        fwd = lambda r: fft2_local(r.astype(cdtype), axis_name, overlap)
+        inv = lambda F: jnp.real(ifft2_local(F, axis_name, overlap))
     return fwd, inv
+
+
+def _tail(tail: str):
+    """Elementwise-tail dispatch: pure-jnp math or the fused Pallas kernel.
+
+    The Pallas path compiles for real on TPU and falls back to interpret
+    mode elsewhere (CPU tests), mirroring the repo-wide kernel convention.
+    """
+    if tail == "jnp":
+        return cpadmm_tail
+    if tail == "pallas":
+        from repro.kernels.cpadmm_tail.ops import fused_cpadmm_tail
+
+        interpret = jax.default_backend() != "tpu"
+
+        def run(x, cx, d_diag, pty, mu, nu, p):
+            return fused_cpadmm_tail(
+                x, cx, d_diag, pty, mu, nu,
+                p.rho, p.alpha / p.sigma, p.tau1, p.tau2,
+                interpret=interpret,
+            )
+
+        return run
+    raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
 
 
 class DistCpadmmParams(NamedTuple):
@@ -117,6 +153,8 @@ def dist_cpadmm_step(
     p: DistCpadmmParams,
     axis_name: str = MODEL_AXIS,
     rfft: bool = False,
+    overlap: int = 1,
+    tail: str = "jnp",
 ) -> DistCpadmmState:
     """One paper-faithful Alg. 3 iteration on local shard blocks.
 
@@ -125,7 +163,8 @@ def dist_cpadmm_step(
     pty: row-sharded P^T y.  Mirrors ``core.admm.cpadmm_step`` line for
     line; broadcasts over leading batch axes.
     """
-    fwd, inv = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name)
+    fwd, inv = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name, overlap)
+    tail_fn = _tail(tail)
 
     def apply(s: Array, r: Array) -> Array:
         return inv(s * fwd(r))
@@ -135,13 +174,9 @@ def dist_cpadmm_step(
         state.z - state.nu
     )
     x = apply(b_spec, rhs)
-    # v-update: D (P^T y + rho (C x - mu))
     cx = apply(spec, x)
-    v = d_diag * (pty + p.rho * (cx - state.mu))
-    # z-update + duals
-    z = soft_threshold(x + state.nu, p.alpha / p.sigma)
-    mu = state.mu + p.tau1 * (v - cx)
-    nu = state.nu + p.tau2 * (x - z)
+    # elementwise tail: v-update, threshold, both dual updates
+    v, z, mu, nu = tail_fn(x, cx, d_diag, pty, state.mu, state.nu, p)
     return DistCpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)
 
 
@@ -154,18 +189,23 @@ def dist_cpadmm_step_fused(
     p: DistCpadmmParams,
     axis_name: str = MODEL_AXIS,
     rfft: bool = False,
+    overlap: int = 1,
+    tail: str = "jnp",
 ) -> DistCpadmmState:
     """Fused Alg. 3 iteration: 2 all-to-alls, one elementwise tail.
 
     The two forward transforms (of v+mu and z-nu) ride one stacked FFT; the
     x-update happens entirely in the frequency domain (B and C^T fuse to one
     local multiply); x and Cx come back through one stacked inverse FFT; the
-    threshold and both dual updates are a single elementwise pass.  With
-    ``rfft`` the stacked transforms run in the half layout — the x-update
-    multiply is closed there because every factor is a Hermitian spectrum.
-    Broadcasts over leading batch axes (the stack axis leads them).
+    threshold and both dual updates are a single elementwise pass (the
+    fused Pallas kernel when ``tail='pallas'``).  With ``rfft`` the stacked
+    transforms run in the half layout — the x-update multiply is closed
+    there because every factor is a Hermitian spectrum.  ``overlap=K``
+    chunks both stacked transposes.  Broadcasts over leading batch axes
+    (the stack axis leads them).
     """
-    fwd_t, inv_t = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name)
+    fwd_t, inv_t = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name, overlap)
+    tail_fn = _tail(tail)
     fwd = fwd_t(jnp.stack([state.v + state.mu, state.z - state.nu]))
     w, zf = fwd[0], fwd[1]
     xf = b_spec * (p.rho * jnp.conj(spec) * w + p.sigma * zf)  # spectrum of x
@@ -173,10 +213,7 @@ def dist_cpadmm_step_fused(
     x, cx = inv[0], inv[1]
 
     # fused elementwise tail: v-update, threshold, both dual updates
-    v = d_diag * (pty + p.rho * (cx - state.mu))
-    z = soft_threshold(x + state.nu, p.alpha / p.sigma)
-    mu = state.mu + p.tau1 * (v - cx)
-    nu = state.nu + p.tau2 * (x - z)
+    v, z, mu, nu = tail_fn(x, cx, d_diag, pty, state.mu, state.nu, p)
     return DistCpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)
 
 
@@ -218,6 +255,8 @@ def make_dist_cpadmm(
     axis_name: str = MODEL_AXIS,
     rfft: bool = False,
     batch_axis: str | None = None,
+    overlap: int = 1,
+    tail: str = "jnp",
 ):
     """Jitted solver(spec2d, mask2d, y2d, alpha, rho, sigma) -> z2d.
 
@@ -237,6 +276,11 @@ def make_dist_cpadmm(
     while the operator spectrum and the measurement mask stay shared (one
     sensing matrix, many signals — the paper's off-line many-recoveries
     workload).
+
+    ``overlap=K`` chunks every transpose-collective K ways so it overlaps
+    the local FFT stage; ``tail='pallas'`` fuses the elementwise tail into
+    the kernels/cpadmm_tail Pallas kernel.  Both are numerically pinned to
+    the defaults (tests/test_dist_equiv.py).
     """
     del n1, n2  # shapes come from the traced operands
     step = dist_cpadmm_step_fused if fused else dist_cpadmm_step
@@ -256,7 +300,10 @@ def make_dist_cpadmm(
         state = DistCpadmmState(zeros, zeros, zeros, zeros, zeros)
 
         def body(s, _):
-            return step(spec, b_spec, d_diag, pty, s, p, axis_name, rfft), None
+            return (
+                step(spec, b_spec, d_diag, pty, s, p, axis_name, rfft, overlap, tail),
+                None,
+            )
 
         state, _ = lax.scan(body, state, None, length=iters)
         return state.z

@@ -1,7 +1,8 @@
 """Pallas TPU kernels (TPU target; interpret=True validated on CPU).
 
 Paper hot spots: circulant_matvec (Algs. 4-8), soft_threshold (Eq. 4 fused),
-spectral_pointwise (CPADMM freq-domain update), banded_conv (Sec. 7 blur).
+spectral_pointwise (CPADMM freq-domain update), cpadmm_tail (the whole
+elementwise iteration tail in one VMEM pass), banded_conv (Sec. 7 blur).
 LM substrate: flash_attention (identified by the roofline analysis).
 Each subpackage: kernel.py (pallas_call + BlockSpec) + ops.py + ref.py.
 """

@@ -1,0 +1,51 @@
+"""Jit'd wrapper: shape plumbing (flatten/pad/reshape) around the tail kernel.
+
+The signal layout is whatever trails ``d_diag`` — a flat ``(n,)`` vector on
+the single-device path, an ``(n1/p, n2)`` four-step block on the sharded
+path.  Per-signal streams may carry leading batch axes; ``pty`` follows the
+signal if it is batched (per-signal measurements) and the operator if not
+(one P^T y shared by the batch, kept resident like ``d_diag``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import cpadmm_tail_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_cpadmm_tail(
+    x, cx, d_diag, pty, mu, nu, rho, gamma, tau1, tau2, *, interpret: bool = True
+):
+    """(v, z, mu', nu') = fused Alg. 3 tail; shapes follow ``x``.
+
+    ``d_diag`` defines the signal block shape S (its full shape); ``x``,
+    ``cx``, ``mu``, ``nu`` are ``batch + S``; ``pty`` is either S (shared)
+    or ``batch + S`` (per-signal).  ``gamma`` is alpha / sigma.
+    """
+    sig_shape = d_diag.shape
+    batch = x.shape[: x.ndim - len(sig_shape)]
+    L = 1
+    for s in sig_shape:
+        L *= s
+    flat_sig = (-1, L) if batch else (L,)
+    pty_batched = pty.ndim > len(sig_shape)
+    v, z, mu_new, nu_new = cpadmm_tail_pallas(
+        d_diag.reshape(L),
+        pty.reshape(flat_sig if pty_batched else (L,)),
+        x.reshape(flat_sig),
+        cx.reshape(flat_sig),
+        mu.reshape(flat_sig),
+        nu.reshape(flat_sig),
+        rho,
+        gamma,
+        tau1,
+        tau2,
+        pty_batched=pty_batched,
+        interpret=interpret,
+    )
+    back = lambda a: a.reshape(batch + sig_shape)
+    return back(v), back(z), back(mu_new), back(nu_new)

@@ -69,7 +69,6 @@ def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> Mamba2Cache:
 
 def _split_proj(cfg: ModelConfig, zxbcdt: Array):
     din, ns, g = cfg.d_ssm_inner, cfg.ssm_state, cfg.ssm_groups
-    nh = cfg.n_ssm_heads
     z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * ns], axis=-1)
     return z, xbc, dt  # gate, conv-input, dt-logits
 

@@ -136,7 +136,6 @@ def greedy_generate(
     state = lm.init_decode_state(cfg, b, max_len)
     decode = jax.jit(make_decode_step(cfg))
     # feed the prompt token by token (tiny prompts in tests)
-    tok = None
     for i in range(prompt.shape[1]):
         logits, state = decode(params, prompt[:, i : i + 1], state)
     out = [jnp.argmax(logits[:, : cfg.vocab], axis=-1)]

@@ -18,13 +18,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.compat import make_mesh, shard_map
 from repro.core.compression import (
     compressed_mean,
     compression_wire_bytes,
     identity_wire_bytes,
     make_compressor,
 )
+from repro.dist.compat import make_mesh, shard_map
 
 mesh = make_mesh((8,), ("data",))
 DIM = 4096

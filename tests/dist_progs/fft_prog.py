@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.circulant import gaussian_circulant
 from repro.dist.compat import make_mesh
 from repro.dist.fft import (
     freq_flat,
@@ -16,7 +17,6 @@ from repro.dist.fft import (
     make_distributed_matvec,
     unlayout_2d,
 )
-from repro.core.circulant import gaussian_circulant
 
 mesh = make_mesh((8,), ("model",))
 n1, n2 = 64, 32

@@ -8,8 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.circulant import PartialCirculant, gaussian_circulant
 from repro.core import RecoveryProblem, solve
+from repro.core.circulant import PartialCirculant, gaussian_circulant
 from repro.data.synthetic import paper_regime, sparse_signal
 from repro.dist.compat import make_mesh
 from repro.dist.fft import layout_2d, unlayout_2d

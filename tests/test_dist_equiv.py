@@ -152,6 +152,130 @@ def test_rfft_matvec_matches_full_and_operator(transpose):
     np.testing.assert_allclose(np.asarray(got_r), np.asarray(want), atol=1e-5 * scale)
 
 
+# ---------------------------------------------------------------------------
+# overlapped chunked-transpose pipeline: overlap=K must match the monolithic
+# overlap=1 path to 1e-5 rel on odd/even factorizations (uneven chunk / pad
+# edge cases), for fft and rfft, unbatched and batched over the data axis.
+# ---------------------------------------------------------------------------
+
+OVERLAP_FACTORIZATIONS = [(32, 16), (16, 15), (15, 16), (15, 15)]
+
+
+def _rel(got, want):
+    got, want = jnp.asarray(got), jnp.asarray(want)
+    return float(jnp.linalg.norm(got - want) / (jnp.linalg.norm(want) + 1e-30))
+
+
+@pytest.mark.parametrize("n1,n2", OVERLAP_FACTORIZATIONS)
+@pytest.mark.parametrize("overlap", [2, 3])
+def test_overlap_fft_matches_monolithic(n1, n2, overlap):
+    n = n1 * n2
+    mesh = make_mesh((1,), ("model",))
+    x = layout_2d(jax.random.normal(jax.random.PRNGKey(21), (n,)), n1, n2)
+
+    f1, i1 = make_distributed_fft(mesh, n1, n2, overlap=1)
+    fk, ik = make_distributed_fft(mesh, n1, n2, overlap=overlap)
+    F1, Fk = f1(x.astype(jnp.complex64)), fk(x.astype(jnp.complex64))
+    assert _rel(Fk, F1) <= 1e-5
+    assert _rel(ik(Fk), i1(F1)) <= 1e-5
+
+    r1, ir1 = make_distributed_rfft(mesh, n1, n2, overlap=1)
+    rk, irk = make_distributed_rfft(mesh, n1, n2, overlap=overlap)
+    H1, Hk = r1(x), rk(x)
+    assert Hk.shape == H1.shape
+    assert _rel(Hk, H1) <= 1e-5
+    assert _rel(irk(Hk), ir1(H1)) <= 1e-5
+
+
+@pytest.mark.parametrize("n1,n2", [(32, 16), (15, 16)])
+def test_overlap_batched_data_axis_matches_monolithic(n1, n2):
+    """overlap=K under a leading data-axis batch: the chunk reassembly must
+    broadcast over the batch dimension."""
+    n, B = n1 * n2, 3
+    mesh = make_mesh((1, 1), ("data", "model"))
+    x = layout_2d(jax.random.normal(jax.random.PRNGKey(22), (B, n)), n1, n2)
+
+    r1, ir1 = make_distributed_rfft(mesh, n1, n2, batch_axis="data", overlap=1)
+    rk, irk = make_distributed_rfft(mesh, n1, n2, batch_axis="data", overlap=3)
+    H1, Hk = r1(x), rk(x)
+    assert Hk.shape == H1.shape == (B, n1, padded_rfft_len(n2, 1))
+    assert _rel(Hk, H1) <= 1e-5
+    assert _rel(irk(Hk), ir1(H1)) <= 1e-5
+
+    f1, i1 = make_distributed_fft(mesh, n1, n2, batch_axis="data", overlap=1)
+    fk, ik = make_distributed_fft(mesh, n1, n2, batch_axis="data", overlap=4)
+    F1, Fk = f1(x.astype(jnp.complex64)), fk(x.astype(jnp.complex64))
+    assert _rel(Fk, F1) <= 1e-5
+    assert _rel(ik(Fk), i1(F1)) <= 1e-5
+
+
+@pytest.mark.parametrize("rfft", [False, True])
+def test_overlap_matvec_matches_monolithic(rfft):
+    mesh = make_mesh((1,), ("model",))
+    _, C, _, _ = _problem()
+    x2d = layout_2d(jax.random.normal(jax.random.PRNGKey(23), (N,)), N1, N2)
+    if rfft:
+        spec = make_distributed_rfft(mesh, N1, N2)[0](layout_2d(C.col, N1, N2))
+    else:
+        spec = make_distributed_fft(mesh, N1, N2)[0](
+            layout_2d(C.col, N1, N2).astype(jnp.complex64)
+        )
+    mv1 = make_distributed_matvec(mesh, rfft=rfft, overlap=1)
+    mvk = make_distributed_matvec(mesh, rfft=rfft, overlap=4)
+    for transpose in (False, True):
+        assert _rel(mvk(spec, x2d, transpose), mv1(spec, x2d, transpose)) <= 1e-5
+
+
+@pytest.mark.parametrize("rfft", [False, True])
+def test_overlap_dist_cpadmm_matches_core_solver(rfft):
+    """The overlapped solver hits the same 1e-5 acceptance gate as overlap=1."""
+    x_true, C, omega, mask = _problem()
+    op = PartialCirculant(C, omega.astype(jnp.int32))
+    y = jnp.take(C.matvec(x_true), omega)
+    x_ref, _ = solve(
+        RecoveryProblem(op=op, y=y, x_true=x_true),
+        "cpadmm", iters=ITERS, record_every=ITERS,
+        alpha=ALPHA, rho=RHO, sigma=SIGMA,
+    )
+
+    mesh = make_mesh((1,), ("model",))
+    spec = make_dist_spectrum(mesh, rfft=rfft)(layout_2d(C.col, N1, N2))
+    solver = make_dist_cpadmm(mesh, N1, N2, ITERS, fused=True, rfft=rfft, overlap=4)
+    z2d = solver(
+        spec,
+        layout_2d(mask, N1, N2),
+        layout_2d(mask * C.matvec(x_true), N1, N2),
+        jnp.float32(ALPHA),
+        jnp.float32(RHO),
+        jnp.float32(SIGMA),
+    )
+    rel = _rel(unlayout_2d(z2d), x_ref)
+    assert rel <= 1e-5, f"overlap=4 rfft={rfft}: relative error {rel:.2e} > 1e-5"
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_pallas_tail_matches_jnp_tail(fused):
+    """tail='pallas' (fused cpadmm_tail kernel, interpret mode on CPU) must
+    reproduce the default jnp tail on the same solve."""
+    x_true, C, omega, mask = _problem()
+    mesh = make_mesh((1,), ("model",))
+    spec_h = make_dist_spectrum(mesh, rfft=True)(layout_2d(C.col, N1, N2))
+    args = (
+        spec_h,
+        layout_2d(mask, N1, N2),
+        layout_2d(mask * C.matvec(x_true), N1, N2),
+        jnp.float32(ALPHA),
+        jnp.float32(RHO),
+        jnp.float32(SIGMA),
+    )
+    iters = 25  # interpret-mode Pallas per iteration: keep the scan short
+    z_jnp = make_dist_cpadmm(mesh, N1, N2, iters, fused=fused, rfft=True)(*args)
+    z_pal = make_dist_cpadmm(
+        mesh, N1, N2, iters, fused=fused, rfft=True, tail="pallas"
+    )(*args)
+    assert _rel(z_pal, z_jnp) <= 1e-5
+
+
 @pytest.mark.parametrize("fused", [False, True])
 def test_rfft_dist_cpadmm_matches_core_solver(fused):
     """The half-spectrum solver hits the same 1e-5 gate as the full path."""

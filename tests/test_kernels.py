@@ -21,6 +21,8 @@ from repro.kernels.circulant_matvec.ref import (
     circulant_matvec_fft_ref,
     circulant_matvec_ref,
 )
+from repro.kernels.cpadmm_tail.ops import fused_cpadmm_tail
+from repro.kernels.cpadmm_tail.ref import cpadmm_tail_ref
 from repro.kernels.soft_threshold.ops import fused_admm_update, fused_ista_update
 from repro.kernels.soft_threshold.ref import (
     admm_threshold_dual_update_ref,
@@ -229,7 +231,7 @@ def test_circulant_matvec_half_spectrum_ns(n):
 
 def test_spectral_update_is_cpadmm_x_update():
     """End-to-end: irfft(kernel(rfft(...))) == the solver's x-update math."""
-    from repro.core.admm import CpadmmParams, cpadmm_setup, cpadmm_init, cpadmm_step
+    from repro.core.admm import CpadmmParams, cpadmm_init, cpadmm_setup, cpadmm_step
     from repro.core.circulant import partial_gaussian_circulant
 
     n = 256
@@ -248,6 +250,72 @@ def test_spectral_update_is_cpadmm_x_update():
     x_kernel = jnp.fft.irfft(xs, n=n)
     s_next = cpadmm_step(op, const, s, p)
     np.testing.assert_allclose(np.asarray(x_kernel), np.asarray(s_next.x), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# cpadmm_tail (fused elementwise iteration tail: v-update + threshold + duals)
+# ---------------------------------------------------------------------------
+
+
+def _tail_case(sig_shape, batch, pty_batched, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+    bs = batch + sig_shape
+    x = jax.random.normal(keys[0], bs)
+    cx = jax.random.normal(keys[1], bs)
+    mu = jax.random.normal(keys[2], bs)
+    nu = jax.random.normal(keys[3], bs)
+    d_diag = jax.random.uniform(keys[4], sig_shape) + 0.1
+    pty = jax.random.normal(keys[5], bs if pty_batched else sig_shape)
+    return x, cx, d_diag, pty, mu, nu
+
+
+@pytest.mark.parametrize(
+    "sig_shape,batch,pty_batched",
+    [
+        ((1024,), (), False),  # flat, block-aligned (single-device layout)
+        ((1000,), (), False),  # pad path
+        ((7,), (), False),  # tiny (whole vector smaller than a block)
+        ((32, 16), (), False),  # (n1/p, n2) four-step block
+        ((32, 15), (3,), False),  # batched signals, shared P^T y, odd cols
+        ((32, 15), (3,), True),  # batched signals, per-signal P^T y
+        ((16, 16), (2, 2), True),  # multi-dim leading batch
+    ],
+)
+def test_fused_cpadmm_tail(sig_shape, batch, pty_batched):
+    x, cx, d_diag, pty, mu, nu = _tail_case(sig_shape, batch, pty_batched)
+    rho, gamma, tau1, tau2 = 0.7, 0.3, 1.0, 0.9
+    got = fused_cpadmm_tail(x, cx, d_diag, pty, mu, nu, rho, gamma, tau1, tau2)
+    want = cpadmm_tail_ref(x, cx, d_diag, pty, mu, nu, rho, gamma, tau1, tau2)
+    for g, w, name in zip(got, want, ("v", "z", "mu", "nu")):
+        assert g.shape == w.shape, (name, g.shape, w.shape)
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), atol=1e-6, err_msg=name
+        )
+
+
+def test_fused_cpadmm_tail_matches_solver_tail():
+    """The kernel, its oracle, and core.admm.cpadmm_tail are the same math."""
+    from repro.core.admm import CpadmmParams, cpadmm_tail
+
+    x, cx, d_diag, pty, mu, nu = _tail_case((512,), (), False, seed=5)
+    p = CpadmmParams(*(jnp.asarray(v, jnp.float32) for v in (0.02, 0.5, 0.1, 1.0, 0.8)))
+    want = cpadmm_tail(x, cx, d_diag, pty, mu, nu, p)
+    got = fused_cpadmm_tail(
+        x, cx, d_diag, pty, mu, nu, p.rho, p.alpha / p.sigma, p.tau1, p.tau2
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+def test_fused_cpadmm_tail_thresholds():
+    """gamma large enough must zero z and leave nu' = nu + tau2 * x."""
+    n = 8
+    x = jnp.asarray([0.4, -0.4, 2.0, -2.0, 0.0, 1.0, -1.0, 0.1])
+    zeros = jnp.zeros((n,))
+    d = jnp.ones((n,))
+    v, z, mu, nu = fused_cpadmm_tail(x, zeros, d, zeros, zeros, zeros, 0.5, 5.0, 1.0, 1.0)
+    np.testing.assert_allclose(np.asarray(z), np.zeros(n), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(nu), np.asarray(x), atol=1e-7)
 
 
 # ---------------------------------------------------------------------------

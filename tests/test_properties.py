@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.circulant import gaussian_circulant, romberg_circulant
 from repro.core.soft_threshold import soft_threshold
-from repro.models.layers import apply_rope, rmsnorm, init_norm
+from repro.models.layers import apply_rope, init_norm, rmsnorm
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
