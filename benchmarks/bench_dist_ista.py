@@ -1,0 +1,55 @@
+"""Distributed CPISTA/FISTA through the plan API (beyond-paper).
+
+The unification benchmark: the same ``solve`` driver runs each method on
+the core backend and on a 1-device mesh through ``repro.ops.plan`` (the
+sharded four-step transforms with a trivial collective), plus the rfft
+half-spectrum variant.  The plan-vs-core ratio is the overhead of the
+planned lowering itself — the quantity the ops layer must keep near 1 —
+and the rfft row tracks the half-spectrum win on the same path.
+
+Rows: ``dist_ista_<method>_<backend>[_rfft]``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import build_problem, emit, pick, time_fn
+
+N = pick(65536, 1024)
+ITERS = pick(100, 10)
+
+
+def main() -> None:
+    from repro.core import solve
+    from repro.dist.compat import make_mesh
+    from repro.ops import plan
+
+    prob = build_problem(N)
+    mesh = make_mesh((1,), ("model",))
+    plans = {
+        "core": plan(prob.op),
+        "plan": plan(prob.op, mesh),
+        "plan_rfft": plan(prob.op, mesh, rfft=True),
+    }
+    for method in ("ista", "fista"):
+        base_us = None
+        for tag, pl in plans.items():
+            def run():
+                x, _ = solve(
+                    prob, method, iters=ITERS, record_every=ITERS, plan=pl
+                )
+                return x
+
+            us = time_fn(jax.jit(run))
+            if base_us is None:
+                base_us = us
+            emit(
+                f"dist_ista_{method}_{tag}",
+                us,
+                f"n={N},iters={ITERS},vs_core={us / base_us:.2f}x",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ SUITE_NAMES = (
     "grad_compression",  # beyond-paper
     "batched_recovery",  # beyond-paper: data-axis batching amortization
     "overlap",  # beyond-paper: chunked-transpose overlap sweep
+    "dist_ista",  # beyond-paper: plan-API distributed CPISTA/FISTA overhead
 )
 
 

@@ -1,13 +1,17 @@
-"""End-to-end distributed recovery driver: one large signal sharded over the
-model axis via the four-step FFT, with checkpoint/restart.
+"""End-to-end distributed recovery through the execution-plan layer: one
+large signal sharded over the model axis via the four-step FFT, driven by
+the *same* solver drivers as a single-device run, with checkpoint/restart.
 
     PYTHONPATH=src python examples/distributed_recovery.py [--devices 8]
+        [--method cpadmm|ista|fista] [--overlap K] [--tail jnp|pallas]
 
 This is the paper's workload as a *cluster job*: the same launcher logic
 runs on a 256-chip pod by swapping the mesh (launch/mesh.py).  The example
-forces N fake host devices, recovers a 64k-sample signal distributed over
-them, kills itself halfway (simulated preemption), and restarts from the
-checkpoint — byte-identical result to an uninterrupted run.
+forces N fake host devices, lowers the sensing operator onto them with
+``repro.ops.plan``, recovers a 64k-sample signal with
+``solve_checkpointed`` (any ``--method`` — distributed CPISTA/FISTA ride
+the same plan), kills itself halfway (simulated preemption), and restarts
+from the checkpoint — identical result to an uninterrupted run.
 """
 
 import argparse
@@ -18,6 +22,11 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--n1", type=int, default=256)
     ap.add_argument("--n2", type=int, default=256)
+    ap.add_argument("--method", default="cpadmm",
+                    choices=("cpadmm", "ista", "fista"),
+                    help="every method runs distributed through the plan")
+    ap.add_argument("--rfft", action="store_true",
+                    help="half-spectrum transforms (half the wire bytes)")
     ap.add_argument("--overlap", type=int, default=1,
                     help="chunked-transpose overlap factor K (1 = monolithic)")
     ap.add_argument("--tail", default="jnp", choices=("jnp", "pallas"),
@@ -28,19 +37,13 @@ if __name__ == "__main__":
 
 import jax  # noqa: E402  (after XLA_FLAGS)
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.ckpt import checkpoint as ckpt  # noqa: E402
-from repro.core.circulant import gaussian_circulant  # noqa: E402
+from repro.core import RecoveryProblem, solve_checkpointed  # noqa: E402
+from repro.core.circulant import PartialCirculant, gaussian_circulant  # noqa: E402
 from repro.data.synthetic import paper_regime, sparse_signal  # noqa: E402
-from repro.dist.compat import make_mesh, shard_map  # noqa: E402
-from repro.dist.fft import layout_2d, unlayout_2d  # noqa: E402
-from repro.dist.recovery import (  # noqa: E402
-    DistCpadmmParams,
-    DistCpadmmState,
-    dist_cpadmm_step,
-    make_dist_spectrum,
-)
+from repro.dist.compat import make_mesh  # noqa: E402
+from repro.ops import plan  # noqa: E402
 
 
 def main():
@@ -48,56 +51,50 @@ def main():
     n = n1 * n2
     mesh = make_mesh((args.devices,), ("model",))
     m, k = paper_regime(n)
-    print(f"n={n} over {args.devices} devices; m={m}, k={k}")
+    print(f"n={n} over {args.devices} devices; m={m}, k={k}, "
+          f"method={args.method}")
 
     x_true = sparse_signal(jax.random.PRNGKey(0), n, k)
     C = gaussian_circulant(jax.random.PRNGKey(1), n, normalize=True)
     omega = jnp.sort(jax.random.permutation(jax.random.PRNGKey(2), n)[:m])
-    mask = jnp.zeros((n,)).at[omega].set(1.0)
-    y_full = mask * C.matvec(x_true)
+    op = PartialCirculant(C, omega.astype(jnp.int32))
+    prob = RecoveryProblem(op=op, y=op.matvec(x_true), x_true=x_true)
 
-    spec2d = make_dist_spectrum(mesh)(layout_2d(C.col, n1, n2))
-    mask2d = layout_2d(mask, n1, n2)
-    y2d = layout_2d(y_full, n1, n2)
-
-    p = DistCpadmmParams(*(jnp.float32(v) for v in (1e-4, 0.01, 0.01, 1.0, 1.0)))
-    b_spec = (1.0 / (p.rho * (jnp.abs(spec2d) ** 2) + p.sigma)).astype(spec2d.dtype)
-    d_diag = jnp.where(mask2d > 0, 1.0 / (1.0 + p.rho), 1.0 / p.rho)
-
-    row = P("model", None)
-    col = P(None, "model")
-
-    def chunk_fn(spec, bs, dd, pty, state):
-        def body(s, _):
-            return dist_cpadmm_step(
-                spec, bs, dd, pty, s, p, "model",
-                overlap=args.overlap, tail=args.tail,
-            ), None
-        state, _ = jax.lax.scan(body, state, None, length=50)
-        return state
-
-    sm = shard_map(chunk_fn, mesh=mesh,
-                   in_specs=(col, col, row, row, DistCpadmmState(*(row,) * 5)),
-                   out_specs=DistCpadmmState(*(row,) * 5), check_vma=False)
-    run_chunk = jax.jit(sm)
-
-    zeros = jnp.zeros_like(y2d)
-    state = DistCpadmmState(zeros, zeros, zeros, zeros, zeros)
+    # one call lowers the operator onto the mesh; the drivers are unchanged
+    pl = plan(op, mesh, n1=n1, n2=n2, rfft=args.rfft,
+              overlap=args.overlap, tail=args.tail)
+    kw = dict(alpha=1e-4, rho=0.01, sigma=0.01, plan=pl, chunk=50)
     ckdir = "artifacts/dist_recovery_ckpt"
+    import shutil
 
-    # --- run 4 chunks, checkpoint each, "crash" after chunk 2
-    for step in range(1, 5):
-        state = run_chunk(spec2d, b_spec, d_diag, y2d, state)
-        ckpt.save(ckdir, step * 50, jax.device_get(state))
-        mse = float(jnp.mean((unlayout_2d(state.z) - x_true) ** 2))
-        print(f"  iter {step*50:4d}  mse {mse:.2e}")
-        if step == 2:
-            print("  -- simulated preemption: restarting from checkpoint --")
-            saved_step, state = ckpt.restore(ckdir, None, jax.eval_shape(lambda: state))
-            assert saved_step == 100
+    shutil.rmtree(ckdir, ignore_errors=True)  # stale steps would win "latest"
 
-    x_hat = unlayout_2d(state.z)
-    final = float(jnp.mean((x_hat - x_true) ** 2))
+    def report(step, state):
+        ckpt.save(ckdir, step, jax.device_get(state))
+
+    # --- run the first 100 iterations, checkpointing every chunk
+    solve_checkpointed(prob, args.method, iters=100, save_cb=report, **kw)
+    print("  -- simulated preemption after iter 100: restarting --")
+
+    # --- restart from the latest checkpoint and run to 200
+    from repro.core.solvers import make_stepper
+
+    shape = jax.eval_shape(make_stepper(prob, args.method, **{
+        k_: v for k_, v in kw.items() if k_ != "chunk"}).init)
+    step_no, state = ckpt.restore(ckdir, None, shape)
+    assert step_no == 100, step_no
+    x_hat, mse = solve_checkpointed(
+        prob, args.method, iters=200, save_cb=report,
+        restore=(step_no, state), **kw,
+    )
+
+    # --- uninterrupted reference run: the restart must be bit-identical
+    x_ref, _ = solve_checkpointed(prob, args.method, iters=200, **kw)
+    identical = bool((x_hat == x_ref).all())
+    print(f"restart-vs-uninterrupted bit-identical: {identical}")
+    assert identical
+
+    final = float(jnp.mean(mse))
     print(f"final MSE {final:.2e}  ({'OK' if final < 1e-4 else 'needs more iters'})")
 
 

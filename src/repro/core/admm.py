@@ -27,6 +27,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.ops.spectral import apply_spectrum
+
 from .circulant import DenseOperator, PartialCirculant
 from .soft_threshold import soft_threshold
 
@@ -109,11 +111,11 @@ def cpadmm_setup(op: PartialCirculant, y: Array, p: CpadmmParams) -> CpadmmConst
     """Alg. 3 line 2 — the FFT-based O(n log n) inversion.
 
     spec(rho C^T C + sigma I) = rho |spec(C)|^2 + sigma  (real, positive), so
-    B's spectrum is its pointwise reciprocal.  D is diagonal by inspection.
+    B's spectrum is its pointwise reciprocal (the operator's gram-inverse
+    capability; one definition in repro.ops.spectral shared with the
+    distributed plan layer).  D is diagonal by inspection.
     """
-    spec = op.circ.spec
-    b_spec = 1.0 / (p.rho * (jnp.abs(spec) ** 2) + p.sigma)
-    b_spec = b_spec.astype(spec.dtype)
+    b_spec = op.gram_inverse_spectrum(p.rho, p.sigma)
     d_diag = jnp.full((op.n,), 1.0 / p.rho, dtype=y.dtype)
     d_diag = d_diag.at[op.omega].set(1.0 / (1.0 + p.rho))
     return CpadmmConst(b_spec=b_spec, d_diag=d_diag, Pty=op.project_back(y))
@@ -126,7 +128,7 @@ def cpadmm_init(op: PartialCirculant, y: Array) -> CpadmmState:
 
 
 def _apply_spec(spec: Array, x: Array, n: int) -> Array:
-    return jnp.fft.irfft(spec * jnp.fft.rfft(x, n=n, axis=-1), n=n, axis=-1)
+    return apply_spectrum(spec, x, n)
 
 
 def cpadmm_tail(

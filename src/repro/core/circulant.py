@@ -25,15 +25,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+# one shared home for the rfft pair and half-spectrum bookkeeping, used by
+# this module and by repro.dist.fft (see repro/ops/spectral.py)
+from repro.ops.spectral import gram_inverse_spectrum as _gram_inverse_spectrum
+from repro.ops.spectral import irfft as _irfft
+from repro.ops.spectral import rfft as _rfft
+
 Array = jax.Array
-
-
-def _rfft(x: Array, n: int) -> Array:
-    return jnp.fft.rfft(x, n=n, axis=-1)
-
-
-def _irfft(x: Array, n: int) -> Array:
-    return jnp.fft.irfft(x, n=n, axis=-1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -86,6 +84,10 @@ class Circulant:
         """
         return jnp.max(jnp.abs(self.spec))
 
+    def operator_norm_bound(self) -> Array:
+        """The RecoveryOperator-protocol bound — exact for circulants."""
+        return self.operator_norm()
+
     # -- algebra (all O(n) / O(n log n)) ----------------------------------
     def matvec(self, x: Array) -> Array:
         """C @ x via the convolution theorem."""
@@ -114,6 +116,13 @@ class Circulant:
         """C^{-1} via reciprocal spectrum (paper Alg. 3 line 2: the O(n log n)
         inversion that replaces the O(n^3) dense inverse)."""
         return Circulant.from_spectrum(1.0 / self.spec, self.n)
+
+    def gram_inverse_spectrum(self, rho, sigma) -> Array:
+        """Half spectrum of (rho C^T C + sigma I)^{-1} — the CPADMM inner
+        inverse (Alg. 3 line 2), pointwise in the spectrum.  This is the
+        gram-inverse capability of repro.ops.operator.GramInvertibleOperator.
+        """
+        return _gram_inverse_spectrum(self.spec, rho, sigma)
 
     def transpose(self) -> "Circulant":
         return Circulant.from_spectrum(jnp.conj(self.spec), self.n)
@@ -178,6 +187,12 @@ class PartialCirculant:
         Used for the safe ISTA step size tau < 1/||A||^2 (paper Alg. 1).
         """
         return self.circ.operator_norm()
+
+    def gram_inverse_spectrum(self, rho, sigma) -> Array:
+        """Spectrum of (rho C^T C + sigma I)^{-1} for the circulant part —
+        what CPADMM's Alg. 3 line 2 inverts (the P part is handled by the
+        diagonal D inverse; see repro.core.admm.cpadmm_setup)."""
+        return self.circ.gram_inverse_spectrum(rho, sigma)
 
     def to_dense(self) -> Array:
         return self.circ.to_dense()[self.omega, :]

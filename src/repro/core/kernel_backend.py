@@ -6,6 +6,11 @@ overhead).  On TPU the hot loops swap in the kernels from repro.kernels via
 this module; `tests/test_kernel_backend.py` pins exact agreement between the
 two backends so the swap is always safe.
 
+Routing: a ``repro.ops.plan`` with ``tail='pallas'`` selects
+``cpadmm_step_pallas`` on the local backend (core.solvers.make_stepper) and
+the same fused cpadmm_tail kernel inside the distributed step
+(dist.recovery._tail) — one registry, both backends.
+
 Step math is identical to ista.ista_step / admm.cpadmm_step — only the
 execution substrate changes:
   * direct circulant matvec      -> kernels.circulant_matvec (time domain)

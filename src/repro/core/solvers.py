@@ -24,6 +24,15 @@ workload): states, traces, and MSEs broadcast per signal, and
 instead of stalling the batch.  Batch-of-1 equals the unbatched run
 (tests/test_batched_recovery.py).
 
+Backends: every driver takes ``plan=`` (repro.ops.plan).  With no plan (or
+a local ``plan(op)``) the steppers run the operator's own matvecs on one
+device; with a distributed plan the same methods lower to the sharded
+four-step transforms of repro.dist — these drivers are the only drivers,
+so tolerance stopping, per-signal freezing, metric traces, and
+checkpoint/restart work identically on a mesh (tests/test_plan.py,
+tests/dist_progs/ista_prog.py).  A local plan's ``tail='pallas'`` swaps the
+CPADMM step onto the fused kernel substrate (core.kernel_backend).
+
 Recovery success follows the paper: MSE = ||x* - x||^2 / n <= 1e-4 (Sec. 6).
 """
 
@@ -67,6 +76,24 @@ def _metrics(problem: RecoveryProblem, x: Array, alpha) -> Tuple[Array, Array, A
     return obj, mse, nnz
 
 
+def _metric_view(problem: RecoveryProblem, plan) -> RecoveryProblem:
+    """The problem the metric traces are computed against.
+
+    On a distributed plan the objective runs through the plan's mask-form
+    operator (``||P^T y - diag(mask) C x||^2`` equals the m-subset
+    objective, since the off-omega rows of both terms are zero) so metric
+    matvecs stay sharded instead of replicating a full-size local FFT per
+    recorded step.
+    """
+    if plan is None or not getattr(plan, "is_distributed", False):
+        return problem
+    return RecoveryProblem(
+        op=plan.operator,
+        y=plan._scattered_measurements(problem),
+        x_true=problem.x_true,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class Stepper:
     """A (init, step, extract) triple hiding per-method state shapes."""
@@ -76,6 +103,9 @@ class Stepper:
     extract: Callable[[Any], Array]  # state -> current x
 
 
+VALID_METHODS = ("ista", "fista", "cpista", "admm", "padmm", "cpadmm")
+
+
 def make_stepper(
     problem: RecoveryProblem,
     method: str,
@@ -83,7 +113,21 @@ def make_stepper(
     rho: float = 0.1,
     sigma: float = 0.1,
     tau: Optional[float] = None,
+    plan=None,
 ) -> Stepper:
+    """Lower (problem, method) to a Stepper on the plan's backend.
+
+    ``plan=None`` (or a local plan) runs the operator's own matvecs; a
+    distributed plan (repro.ops.plan with a mesh) lowers the same method to
+    the sharded four-step transforms — the stepper contract (init / step /
+    extract-flat-x) is identical, which is what lets every driver below run
+    unchanged on both backends.
+    """
+    if plan is not None and getattr(plan, "is_distributed", False):
+        return plan.build_stepper(
+            problem, method, alpha=alpha, rho=rho, sigma=sigma, tau=tau
+        )
+    tail = getattr(plan, "tail", "jnp") if plan is not None else "jnp"
     op, y = problem.op, problem.y
     if method in ("ista", "fista", "cpista"):
         tau_v = (
@@ -116,12 +160,25 @@ def make_stepper(
             tau2=jnp.asarray(1.0 if tau is None else tau, y.dtype),
         )
         const = admm_mod.cpadmm_setup(op, y, p)
+        if tail == "pallas":
+            # plan attribute tail='pallas' on the local backend: the fused
+            # kernels/cpadmm_tail substrate (core.kernel_backend)
+            from repro.kernels.cpadmm_tail.ops import interpret_default
+
+            from .kernel_backend import cpadmm_step_pallas
+
+            interpret = interpret_default()
+            step = lambda s: cpadmm_step_pallas(op, const, s, p, interpret=interpret)
+        else:
+            step = lambda s: admm_mod.cpadmm_step(op, const, s, p)
         return Stepper(
             init=lambda: admm_mod.cpadmm_init(op, y),
-            step=lambda s: admm_mod.cpadmm_step(op, const, s, p),
+            step=step,
             extract=lambda s: s.z,
         )
-    raise ValueError(f"unknown method {method!r}")
+    raise ValueError(
+        f"unknown method {method!r}; valid methods: {', '.join(VALID_METHODS)}"
+    )
 
 
 def solve(
@@ -129,11 +186,24 @@ def solve(
     method: str = "cpadmm",
     iters: int = 200,
     alpha: float = 1e-4,
-    record_every: int = 1,
+    record_every: Optional[int] = None,
+    plan=None,
     **kw,
 ) -> Tuple[Array, Trace]:
-    """Run a fixed number of iterations under jit; record metric traces."""
-    stepper = make_stepper(problem, method, alpha=alpha, **kw)
+    """Run a fixed number of iterations under jit; record metric traces.
+
+    ``plan=`` selects the execution backend (repro.ops.plan).  Each metric
+    record costs one operator application, so ``record_every`` defaults to
+    1 locally but to ``iters`` (a single trace point) on a distributed
+    plan — a per-iteration trace there would add two transpose-collectives
+    per iteration on top of the fused step's two; pass ``record_every``
+    explicitly to trace a distributed run more often.
+    """
+    if record_every is None:
+        distributed = plan is not None and getattr(plan, "is_distributed", False)
+        record_every = iters if distributed else 1
+    stepper = make_stepper(problem, method, alpha=alpha, plan=plan, **kw)
+    metric_problem = _metric_view(problem, plan)
     inner = max(1, record_every)
     outer = max(1, iters // inner)
 
@@ -142,7 +212,7 @@ def solve(
             lambda s, _: (stepper.step(s), None), state, None, length=inner
         )
         x = stepper.extract(state)
-        return state, _metrics(problem, x, alpha)
+        return state, _metrics(metric_problem, x, alpha)
 
     state, (obj, mse, nnz) = jax.lax.scan(
         scan_body, stepper.init(), None, length=outer
@@ -175,6 +245,7 @@ def solve_until(
     max_iters: int = 5000,
     min_iters: int = 50,
     alpha: float = 1e-4,
+    plan=None,
     **kw,
 ) -> Tuple[Array, Array]:
     """Iterate until relative iterate change < tol (or max_iters); returns
@@ -190,8 +261,12 @@ def solve_until(
 
     ``min_iters`` guards against the thresholded iterate being frozen at 0
     during the first iterations (the relative change would be spuriously 0).
+
+    ``plan=`` selects the execution backend: a distributed plan gives
+    tolerance-stopped *distributed* recovery (the convergence test runs on
+    the flat extract, so the per-signal freeze semantics are identical).
     """
-    stepper = make_stepper(problem, method, alpha=alpha, **kw)
+    stepper = make_stepper(problem, method, alpha=alpha, plan=plan, **kw)
     s0 = stepper.init()
     x0 = stepper.extract(s0)
     batch = x0.shape[:-1]
@@ -234,12 +309,17 @@ def solve_checkpointed(
     alpha: float = 1e-4,
     save_cb: Optional[Callable[[int, Any], None]] = None,
     restore: Optional[Tuple[int, Any]] = None,
+    plan=None,
     **kw,
 ) -> Tuple[Array, Array]:
     """Host-chunked driver: jit-run ``chunk`` iterations at a time, invoking
     ``save_cb(step, state)`` between chunks.  ``restore=(step, state)``
-    resumes an interrupted recovery — see repro.ckpt.solver_checkpoint."""
-    stepper = make_stepper(problem, method, alpha=alpha, **kw)
+    resumes an interrupted recovery — see repro.ckpt.solver_checkpoint.
+
+    With a distributed ``plan=`` the saved state leaves are the sharded
+    (n1, n2)-layout iterates — the fault-tolerance path for very long
+    *distributed* recoveries (paper Sec. 7's three-hour horizon)."""
+    stepper = make_stepper(problem, method, alpha=alpha, plan=plan, **kw)
 
     @jax.jit
     def run_chunk(state):
@@ -257,5 +337,5 @@ def solve_checkpointed(
         if save_cb is not None:
             save_cb(step, state)
     x = stepper.extract(state)
-    _, mse, _ = _metrics(problem, x, alpha)
+    _, mse, _ = _metrics(_metric_view(problem, plan), x, alpha)
     return x, mse

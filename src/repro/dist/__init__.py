@@ -17,18 +17,24 @@ Deblurring", arXiv:1707.02244):
                matvec costs exactly two transpose-collectives
                (make_distributed_fft, make_distributed_matvec).  ``overlap=K``
                splits each transpose into K chunked all-to-alls overlapped
-               with the first local FFT stage (same bytes, same result).
-    recovery   CPADMM, paper Alg. 3, over that layout: the spectral inverse
-               B = (rho C^T C + sigma I)^{-1} stays sharded in the frequency
-               domain; dist_cpadmm_step is the paper-faithful 6-transform
-               iteration, dist_cpadmm_step_fused batches it down to two
-               all-to-alls per iteration (make_dist_cpadmm,
-               make_dist_spectrum); ``tail='pallas'`` runs the elementwise
-               tail as the fused kernels/cpadmm_tail VMEM pass.
+               with the first local FFT stage (same payload modulo chunk
+               zero-padding, same result).
+    recovery   the *planned step functions* of CPADMM, paper Alg. 3, over
+               that layout: the spectral inverse B = (rho C^T C + sigma
+               I)^{-1} stays sharded in the frequency domain;
+               dist_cpadmm_step is the paper-faithful 6-transform iteration,
+               dist_cpadmm_step_fused batches it down to two all-to-alls per
+               iteration; ``tail='pallas'`` runs the elementwise tail as the
+               fused kernels/cpadmm_tail VMEM pass.  There is no driver
+               here: ``repro.ops.plan(op, mesh)`` lowers an operator onto
+               these steps (and onto planned CPISTA/FISTA matvecs), and the
+               ``repro.core.solvers`` drivers run it — make_dist_cpadmm
+               survives only as a deprecation shim over that API.
 
 The solvers here must agree with the single-device ``repro.core`` paths —
-tests/test_dist_equiv.py pins the distributed-vs-core CPADMM match, and
-tests/dist_progs/*.py exercise every module on 8 fake devices.
+tests/test_dist_equiv.py and tests/test_plan.py pin the distributed-vs-core
+match for every method, and tests/dist_progs/*.py exercise every module on
+8 fake devices.
 """
 
 from . import compat, fft, recovery, sharding  # noqa: F401

@@ -81,6 +81,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+# Hermitian bookkeeping shared with the core circulant algebra — one
+# definition in repro.ops.spectral, re-exported here because this module
+# defines the (n1, n2) layout those helpers are used against.
+from repro.ops.spectral import half_to_full, padded_rfft_len, rfft_len  # noqa: F401
+
 from .compat import shard_map
 
 Array = jax.Array
@@ -115,39 +120,6 @@ def freq_flat(F: Array) -> Array:
     For the four-step output this is a plain row-major reshape.
     """
     return F.reshape(F.shape[:-2] + (F.shape[-2] * F.shape[-1],))
-
-
-# --------------------------------------------------------------------------
-# half-spectrum (rfft) bookkeeping
-# --------------------------------------------------------------------------
-
-
-def rfft_len(n2: int) -> int:
-    """Kept columns of the half spectrum: k2 in [0, n2//2]."""
-    return n2 // 2 + 1
-
-
-def padded_rfft_len(n2: int, p: int) -> int:
-    """Kept columns zero-padded up to a multiple of the mesh size ``p`` so
-    the transpose-collective can split them evenly on any device count."""
-    nf = rfft_len(n2)
-    return -(-nf // p) * p
-
-
-def half_to_full(Fh: Array, n2: int) -> Array:
-    """Half-spectrum layout (..., n1, >=nf) -> full spectrum (..., n1, n2).
-
-    The discarded columns follow from Hermitian symmetry of the flat DFT,
-    ``X[n - k] = conj(X[k])``: with ``k = n2*k1 + k2`` that reads
-
-        F[k1, k2] = conj(F[n1 - 1 - k1, n2 - k2])    for k2 in [nf, n2).
-
-    Verification/bridging helper — solvers never materialize the full half.
-    """
-    nf = rfft_len(n2)
-    Fh = Fh[..., :nf]
-    tail = jnp.flip(jnp.conj(Fh[..., 1 : n2 - nf + 1]), axis=(-2, -1))
-    return jnp.concatenate([Fh, tail], axis=-1)
 
 
 # --------------------------------------------------------------------------
@@ -435,7 +407,8 @@ def make_distributed_fft(
     fft2d maps a row-sharded layout_2d array to its column-sharded spectrum;
     ifft2d inverts it.  Each costs exactly one all-to-all (``overlap=K``
     splits it into K chunked collectives that overlap the first local FFT
-    stage; same bytes, same result).  With ``batch_axis`` the arrays are
+    stage; same payload modulo chunk zero-padding, same result).
+    With ``batch_axis`` the arrays are
     (B, n1, n2) with B sharded over that mesh axis — the whole batch shares
     the one collective.
     """

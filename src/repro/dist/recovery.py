@@ -1,4 +1,10 @@
-"""Distributed CPADMM (paper Alg. 3) over the sharded four-step FFT.
+"""Planned CPADMM step functions (paper Alg. 3) over the sharded four-step FFT.
+
+This module holds the *per-iteration math* of distributed CPADMM and
+nothing else: the solver drivers live in ``repro.core.solvers`` and reach
+these steps through an execution plan (``repro.ops.plan(op, mesh)``), which
+is also how distributed CPISTA/FISTA run — same drivers, planned matvecs.
+``make_dist_cpadmm`` remains only as a deprecation shim over that API.
 
 The single-device solver (``repro.core.admm.cpadmm_step``) does per
 iteration three circulant applications — C^T, B = (rho C^T C + sigma I)^{-1}
@@ -46,7 +52,8 @@ Two iteration-critical-path knobs ride every step:
 
     overlap=K   each transform's transpose-collective is split into K
                 chunked all-to-alls overlapped with the first local FFT
-                stage (repro.dist.fft docstring) — same bytes, same result,
+                stage (repro.dist.fft docstring) — same payload (pad bytes
+                only when K does not divide the chunk axis), same result,
                 up to (K-1)/K of the wire hidden behind compute.
     tail        'jnp' (default) keeps the elementwise tail as XLA-fused
                 jnp ops; 'pallas' routes it through the fused
@@ -60,12 +67,11 @@ tests/dist_progs/batched_recovery_prog.py).
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core.admm import cpadmm_tail
 
@@ -76,8 +82,10 @@ from .fft import (
     fft2_local,
     ifft2_local,
     irfft2_local,
+    layout_2d,
     rfft2_local,
     row_spec,
+    unlayout_2d,
 )
 
 Array = jax.Array
@@ -109,9 +117,9 @@ def _tail(tail: str):
     if tail == "jnp":
         return cpadmm_tail
     if tail == "pallas":
-        from repro.kernels.cpadmm_tail.ops import fused_cpadmm_tail
+        from repro.kernels.cpadmm_tail.ops import fused_cpadmm_tail, interpret_default
 
-        interpret = jax.default_backend() != "tpu"
+        interpret = interpret_default()
 
         def run(x, cx, d_diag, pty, mu, nu, p):
             return fused_cpadmm_tail(
@@ -258,66 +266,42 @@ def make_dist_cpadmm(
     overlap: int = 1,
     tail: str = "jnp",
 ):
-    """Jitted solver(spec2d, mask2d, y2d, alpha, rho, sigma) -> z2d.
+    """DEPRECATED shim: jitted solver(spec2d, mask2d, y2d, alpha, rho, sigma).
 
-    spec2d: column-sharded spectrum of the sensing circulant C (from
-    :func:`make_dist_spectrum` with the matching ``rfft`` flag).  mask2d:
-    row-sharded 0/1 indicator of the measurement set Omega in the signal
-    layout.  y2d: row-sharded P^T y.  Runs ``iters`` scanned iterations
-    from the zero state and returns the sparse iterate z (row-sharded);
-    defaults match the single-device ``core.solvers.solve(..., 'cpadmm')``
-    path (tau1 = tau2 = 1).
+    The bespoke distributed driver this factory used to build is gone — the
+    unified path is::
 
-    ``rfft=True`` runs every transform in the half-spectrum layout: same
-    all-to-all count, half the wire bytes and local FFT flops.
+        pl = repro.ops.plan(op, mesh, rfft=..., overlap=..., tail=...)
+        z, trace = repro.core.solvers.solve(problem, 'cpadmm', plan=pl)
 
-    ``batch_axis='data'`` recovers a leading batch of B signals sharded
-    over the mesh's data axis from one call: y2d/z2d become (B, n1, n2)
-    while the operator spectrum and the measurement mask stay shared (one
-    sensing matrix, many signals — the paper's off-line many-recoveries
-    workload).
-
-    ``overlap=K`` chunks every transpose-collective K ways so it overlaps
-    the local FFT stage; ``tail='pallas'`` fuses the elementwise tail into
-    the kernels/cpadmm_tail Pallas kernel.  Both are numerically pinned to
-    the defaults (tests/test_dist_equiv.py).
+    which also unlocks solve_until / solve_checkpointed / metric traces on
+    the mesh.  This shim keeps the old call signature working by building a
+    plan from the pre-sharded parts and running the same ``solve`` driver;
+    output is pinned identical to the plan route (tests/test_plan.py).
     """
-    del n1, n2  # shapes come from the traced operands
-    step = dist_cpadmm_step_fused if fused else dist_cpadmm_step
-
-    def run(spec, mask, pty, alpha, rho, sigma):
-        p = DistCpadmmParams(
-            alpha=alpha,
-            rho=rho,
-            sigma=sigma,
-            tau1=jnp.ones((), pty.dtype),
-            tau2=jnp.ones((), pty.dtype),
-        )
-        # Alg. 3 line 2, sharded: both inner inverses are local pointwise ops
-        b_spec = (1.0 / (rho * jnp.abs(spec) ** 2 + sigma)).astype(spec.dtype)
-        d_diag = jnp.where(mask > 0, 1.0 / (1.0 + rho), 1.0 / rho).astype(pty.dtype)
-        zeros = jnp.zeros_like(pty)
-        state = DistCpadmmState(zeros, zeros, zeros, zeros, zeros)
-
-        def body(s, _):
-            return (
-                step(spec, b_spec, d_diag, pty, s, p, axis_name, rfft, overlap, tail),
-                None,
-            )
-
-        state, _ = lax.scan(body, state, None, length=iters)
-        return state.z
-
-    row = row_spec(axis_name, batch_axis)
-    row_shared = row_spec(axis_name)  # mask: one Omega for the whole batch
-    col = col_spec(axis_name)  # spectrum is shared across the batch
-    scalar = P()
-    return jax.jit(
-        shard_map(
-            run,
-            mesh=mesh,
-            in_specs=(col, row_shared, row, scalar, scalar, scalar),
-            out_specs=row,
-            check_vma=False,
-        )
+    warnings.warn(
+        "make_dist_cpadmm is deprecated: build a repro.ops.plan and call "
+        "repro.core.solvers.solve(..., method='cpadmm', plan=...) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    if batch_axis is not None and batch_axis not in mesh.axis_names:
+        raise ValueError(f"batch_axis {batch_axis!r} not in mesh axes {mesh.axis_names}")
+
+    def run(spec2d, mask2d, y2d, alpha, rho, sigma):
+        from repro.core.solvers import RecoveryProblem, solve
+        from repro.ops import plan_from_parts
+
+        pl = plan_from_parts(
+            mesh, spec2d, mask2d,
+            n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail, fused=fused,
+            batch_axis=batch_axis, axis_name=axis_name,
+        )
+        prob = RecoveryProblem(op=pl.operator, y=unlayout_2d(y2d))
+        z, _ = solve(
+            prob, "cpadmm", iters=iters, record_every=iters,
+            alpha=alpha, rho=rho, sigma=sigma, plan=pl,
+        )
+        return layout_2d(z, n1, n2)
+
+    return jax.jit(run)

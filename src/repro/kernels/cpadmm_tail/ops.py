@@ -16,6 +16,13 @@ import jax
 from .kernel import cpadmm_tail_pallas
 
 
+def interpret_default() -> bool:
+    """Pallas execution-mode default shared by every tail='pallas' call
+    site (core.solvers, dist.recovery): compiled for real on TPU, interpret
+    mode elsewhere (CPU tests) — the repo-wide kernel convention."""
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fused_cpadmm_tail(
     x, cx, d_diag, pty, mu, nu, rho, gamma, tau1, tau2, *, interpret: bool = True

@@ -20,7 +20,9 @@ paper's Sec. 7 deblurring.  Four variants of the iteration are compared:
                 transform's all-to-all is split into K chunk collectives
                 issued as their first-stage FFT finishes, so up to
                 (K-1)/K of the wire time hides behind local compute
-                (same bytes on the wire — the win is latency, reported as
+                (same payload on the wire, zero-padded to equal chunks when
+                K does not divide the chunked extent — the win is latency,
+                reported as
                 the hidden-collective fraction / effective collective time)
 
 This is the §Perf hillclimb cell for the paper's technique: the printed
@@ -36,20 +38,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.dist.compat import shard_map
 
 from repro.dist.fft import padded_rfft_len
-from repro.dist.recovery import (
-    DistCpadmmParams,
-    DistCpadmmState,
-    dist_cpadmm_step,
-    dist_cpadmm_step_fused,
-)
+from repro.dist.recovery import DistCpadmmState
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, WIRE_MULT
+from repro.ops import plan_from_parts
 
 SDS = jax.ShapeDtypeStruct
 
@@ -64,38 +59,23 @@ VARIANTS = (  # (tag, fused, rfft, overlap)
 def lower_variant(
     mesh, n1, n2, batch, iters, fused, rfft=False, overlap=1, axis_name="model"
 ):
-    step = dist_cpadmm_step_fused if fused else dist_cpadmm_step
+    """Lower one iteration block through the plan API's abstract entry point
+    (``ExecutionPlan.cpadmm_block``): the batch rides (pod x) data, each
+    signal's transforms shard over the model axis — the same lowering the
+    unified drivers execute, here compiled from ShapeDtypeStructs only."""
     dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    row = P(axis_name, None)  # shared (n1, n2) arrays, rows sharded
-    col = P(None, axis_name)  # shared spectra, columns sharded
-    row_b = P(dp, axis_name, None)  # (batch, n1, n2), batch over data
-
-    def block(spec, b_spec, d_diag, pty, state):
-        p = DistCpadmmParams(*(jnp.float32(v) for v in (1e-4, 0.01, 0.01, 1.0, 1.0)))
-
-        def body(s, _):
-            return step(spec, b_spec, d_diag, pty, s, p, axis_name, rfft, overlap), None
-
-        state, _ = jax.lax.scan(body, state, None, length=iters)
-        return state
-
-    sm = shard_map(
-        block,
-        mesh=mesh,
-        in_specs=(col, col, row, row_b, DistCpadmmState(*(row_b,) * 5)),
-        out_specs=DistCpadmmState(*(row_b,) * 5),
-        check_vma=False,
+    pl = plan_from_parts(
+        mesh, n1=n1, n2=n2, rfft=rfft, overlap=overlap, fused=fused,
+        batch_axis=dp, axis_name=axis_name,
     )
+    block = pl.cpadmm_block(iters)
     model_size = mesh.shape[axis_name]
     ncols = padded_rfft_len(n2, model_size) if rfft else n2
     spec_s = SDS((n1, ncols), jnp.complex64)
     diag_s = SDS((n1, n2), jnp.float32)
     real_b = SDS((batch, n1, n2), jnp.float32)
     state_s = DistCpadmmState(*(real_b,) * 5)
-    jitted = jax.jit(sm)  # shardings come from shard_map specs
-    lowered = jitted.lower(spec_s, spec_s, diag_s, real_b, state_s)
-    compiled = lowered.compile()
-    return compiled
+    return block.lower(spec_s, spec_s, diag_s, real_b, state_s).compile()
 
 
 def analyze(compiled, iters, batch, overlap=1):

@@ -9,13 +9,32 @@ signals) is recovered with the selected solver, checkpointing solver state
 every chunk.  ``--tol`` switches from the fixed iteration budget to the
 tolerance-driven driver: convergence is then tracked *per signal* (early
 finishers freeze while the rest iterate) and the per-signal iteration
-counts are reported.  For within-signal model parallelism across a mesh see
-examples/distributed_recovery.py and repro.dist.recovery.
+counts are reported.
+
+``--mesh`` routes the same job through the execution-plan layer
+(``repro.ops.plan``): each signal is sharded over the mesh's model axis via
+the four-step FFT and *the same drivers* run — every ``--method`` works
+distributed, tolerance-stopped, and checkpointable.  ``--mesh 8`` shards
+signals over 8 devices; ``--mesh 2x4`` additionally shards the batch over a
+2-way data axis.  ``--fake-devices N`` forces N XLA host devices so the
+distributed path can be exercised on a CPU box.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+
+if __name__ == "__main__":  # --fake-devices must land before jax imports
+    _pre = argparse.ArgumentParser(add_help=False)
+    _pre.add_argument("--fake-devices", type=int, default=0)
+    _n, _ = _pre.parse_known_args()
+    if _n.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n.fake_devices}"
+        )
+
 import time
 
 import jax
@@ -30,38 +49,82 @@ from repro.core import (
 )
 from repro.data.synthetic import paper_regime, sparse_signal
 
+METHODS = ("cpadmm", "ista", "fista")
 
-def main():
-    ap = argparse.ArgumentParser()
+
+def _parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="batched CS recovery launcher (see module docstring)"
+    )
     ap.add_argument("--n", type=int, default=65536)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--method", default="cpadmm",
-                    choices=["cpadmm", "ista", "fista"])
+    ap.add_argument("--method", default="cpadmm", choices=METHODS,
+                    metavar=f"{{{','.join(METHODS)}}}",
+                    help="solver method; every method runs on every backend")
     ap.add_argument("--iters", type=int, default=600)
     ap.add_argument("--chunk", type=int, default=100)
     ap.add_argument("--alpha", type=float, default=1e-4)
     ap.add_argument("--tol", type=float, default=0.0,
                     help="run to per-signal convergence (relative-change "
                          "tolerance) instead of a fixed --iters budget")
+    ap.add_argument("--mesh", default=None,
+                    help="distributed plan: 'M' (model axis size) or 'DxM' "
+                         "(data x model); e.g. --mesh 8 or --mesh 2x4")
+    ap.add_argument("--n1", type=int, default=None,
+                    help="four-step row count for --mesh (auto near sqrt(n))")
+    ap.add_argument("--rfft", action="store_true",
+                    help="half-spectrum distributed transforms (with --mesh)")
+    ap.add_argument("--overlap", type=int, default=1,
+                    help="chunked-transpose overlap factor K (with --mesh)")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force N XLA host devices (must be the first thing "
+                         "jax sees; honored when run as a script)")
     ap.add_argument("--ckpt-dir", default="artifacts/recover_ckpt")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def build_plan(op, mesh_arg: str | None, n1=None, rfft=False, overlap=1):
+    """Lower ``op`` per the CLI mesh spec: None (local) or 'M' / 'DxM'."""
+    from repro.dist.compat import make_mesh
+    from repro.ops import plan
+
+    if mesh_arg is None:
+        return plan(op)
+    shape = tuple(int(t) for t in mesh_arg.lower().split("x"))
+    if len(shape) == 1:
+        mesh = make_mesh(shape, ("model",))
+        batch_axis = None
+    elif len(shape) == 2:
+        mesh = make_mesh(shape, ("data", "model"))
+        batch_axis = "data"
+    else:
+        raise ValueError(f"--mesh must be 'M' or 'DxM', got {mesh_arg!r}")
+    return plan(op, mesh, n1=n1, rfft=rfft, overlap=overlap,
+                batch_axis=batch_axis)
+
+
+def main(argv=None):
+    args = _parser().parse_args(argv)
 
     n = args.n
     m, k = paper_regime(n)
     print(f"recovering batch={args.batch} signals, n={n}, m={m}, k={k}, "
-          f"method={args.method}")
+          f"method={args.method}"
+          + (f", mesh={args.mesh} (plan API)" if args.mesh else ""))
 
     x_true = sparse_signal(jax.random.PRNGKey(args.seed), n, k, batch=(args.batch,))
     op = partial_gaussian_circulant(jax.random.PRNGKey(args.seed + 1), n, m,
                                     normalize=True)
     prob = RecoveryProblem(op=op, y=op.matvec(x_true), x_true=x_true)
+    pl = build_plan(op, args.mesh, n1=args.n1, rfft=args.rfft,
+                    overlap=args.overlap)
 
     if args.tol > 0:
         t0 = time.time()
         x_hat, iters_used = solve_until(
             prob, args.method, tol=args.tol, max_iters=args.iters,
-            alpha=args.alpha, rho=0.01, sigma=0.01,
+            alpha=args.alpha, rho=0.01, sigma=0.01, plan=pl,
         )
         d = x_true - x_hat
         mse = jnp.mean(d * d, axis=-1)
@@ -77,7 +140,7 @@ def main():
         from repro.core.solvers import make_stepper
 
         stepper = make_stepper(prob, args.method, alpha=args.alpha,
-                               rho=0.01, sigma=0.01)
+                               rho=0.01, sigma=0.01, plan=pl)
         shape = jax.eval_shape(stepper.init)
         step_no, state = ckpt.restore(args.ckpt_dir, latest, shape)
         restore = (step_no, state)
@@ -94,10 +157,11 @@ def main():
         sigma=0.01,
         save_cb=lambda s, st: ckpt.save(args.ckpt_dir, s, jax.device_get(st)),
         restore=restore,
+        plan=pl,
     )
     print(f"finished in {time.time()-t0:.1f}s; per-signal MSE: "
           f"{[f'{v:.2e}' for v in jnp.atleast_1d(mse)]}")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

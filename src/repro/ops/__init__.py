@@ -1,0 +1,66 @@
+"""repro.ops — the execution-plan operator layer.
+
+This package is the seam between *what* the paper's solvers compute and
+*where* it runs.  The mapping back to the paper (arXiv:1707.02244):
+
+    operator.RecoveryOperator   the four capabilities Algs. 1-3 touch an
+                                operator through: matvec / rmatvec (Alg. 1
+                                lines 3-4, Alg. 3 lines 3-4), an operator
+                                norm bound (Alg. 1's safe step size
+                                tau < 1/||A||^2), and — for CPADMM — the
+                                gram-inverse spectrum of Alg. 3 line 2
+                                (GramInvertibleOperator).
+    spectral                    the shared rfft / half-spectrum bookkeeping
+                                behind the C = F^H diag(spec) F identity of
+                                Sec. 4 (imported by core.circulant AND
+                                dist.fft — one definition, both backends).
+    plan.plan(op, mesh=None)    lowers an operator to an execution plan:
+                                with no mesh, the identity lowering (the
+                                operator's own O(n log n) matvecs — CPISTA
+                                Alg. 1 / CPADMM Alg. 3 exactly as the paper
+                                runs them on one GPU); with a mesh, the
+                                sharded four-step transforms of repro.dist
+                                (Sec. 4 made multi-device), with rfft /
+                                overlap / tail / batch_axis as plan
+                                attributes.
+
+The core drivers (``repro.core.solvers.solve`` / ``solve_until`` /
+``solve_checkpointed``) accept ``plan=`` and are the *only* drivers: every
+method (ista / fista / cpadmm) runs on every backend, which is how the
+distributed solvers inherit tolerance stopping, per-signal convergence
+freezing, metric traces, and checkpoint/restart (the paper's Sec. 7
+three-hour-recovery scenario) without a second driver stack.
+
+Imports are lazy (PEP 562) so ``repro.core`` can import
+``repro.ops.spectral`` without pulling the plan machinery (which itself
+builds on ``repro.core`` and ``repro.dist``) into the import cycle.
+"""
+
+from . import spectral  # noqa: F401  (dependency-free; safe to load eagerly)
+
+_LAZY = {
+    "ExecutionPlan": "plan",
+    "PlannedOperator": "plan",
+    "plan": "plan",
+    "plan_from_parts": "plan",
+    "GramInvertibleOperator": "operator",
+    "RecoveryOperator": "operator",
+}
+
+__all__ = sorted(_LAZY) + ["spectral"]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        # Bind every lazy name this module provides, not just the one asked
+        # for: importing the `plan` submodule sets the package attribute
+        # `repro.ops.plan` to the *module*, which would otherwise shadow the
+        # function of the same name on the next lookup.
+        for other, modname in _LAZY.items():
+            if modname == _LAZY[name]:
+                globals()[other] = getattr(mod, other)
+        return globals()[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,507 @@
+"""Execution plans: lower any RecoveryOperator to a solver backend.
+
+``plan(op)`` is the identity lowering — the operator's own matvecs run on
+one device, bit-exactly (tests/test_plan.py pins this).  ``plan(op, mesh)``
+lowers the same operator to the sharded four-step transforms of
+:mod:`repro.dist.fft`: matvecs become shard_mapped FFT applications (two
+transpose-collectives each), and the CPADMM inner inverse stays a pointwise
+spectral reciprocal on the column-sharded spectrum block.  Either way the
+result is consumed by the *same* drivers — ``repro.core.solvers``'s
+``solve`` / ``solve_until`` / ``solve_checkpointed`` take ``plan=`` and run
+every method (ista / fista / cpadmm) on every backend, so tolerance
+stopping, metric traces, per-signal convergence freezing, and
+checkpoint/restart come for free on a mesh.
+
+Distributed measurement convention
+----------------------------------
+On a mesh the m-subset gather/scatter of ``P`` would be a cross-shard
+permutation, so the plan works in the *mask form* of the partial circulant:
+``M = diag(mask) C`` with measurements scattered full-length
+(``y_full = P^T y``).  The two forms produce identical solver iterates —
+``M^T M = A^T A`` and ``M^T y_full = A^T y`` — and the drivers accept either
+``problem.y`` of length m (scattered here via ``op.project_back``) or an
+already-scattered length-n vector.
+
+Plan attributes = backend knobs
+-------------------------------
+    rfft        half-spectrum transforms (half the FFT flops / wire bytes)
+    overlap=K   chunked transpose-collectives overlapped with the local FFT
+    tail        'jnp' or 'pallas' — the CPADMM elementwise-tail substrate
+                (the fused kernels/cpadmm_tail VMEM pass); honored by the
+                local backend too via core.kernel_backend
+    fused       frequency-domain CPADMM x-update (2 all-to-alls/iter vs 6)
+    batch_axis  mesh axis a leading batch of signals is sharded over
+
+All are numerically pinned to their defaults (tests/test_dist_equiv.py,
+tests/test_plan.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+from repro.dist.fft import (
+    MODEL_AXIS,
+    layout_2d,
+    matvec_local,
+    rmatvec_local,
+    unlayout_2d,
+)
+from repro.dist.recovery import (
+    DistCpadmmParams,
+    DistCpadmmState,
+    dist_cpadmm_step,
+    dist_cpadmm_step_fused,
+    make_dist_spectrum,
+)
+
+from . import spectral
+
+Array = jax.Array
+
+_ISTA_METHODS = ("ista", "fista", "cpista")
+
+
+def _factorize(n: int, n1: Optional[int], n2: Optional[int], p: int, rfft: bool):
+    """Pick/validate the four-step n = n1 x n2 split for a p-device axis.
+
+    Constraints come from the transpose-collectives: rows (n1) must split
+    evenly over the axis, and so must the spectrum columns unless the rfft
+    path pads them (``spectral.padded_rfft_len``).
+    """
+    if n1 is not None and n2 is None:
+        n2 = n // n1
+    if n1 is None and n2 is not None:
+        n1 = n // n2
+    if n1 is None:
+        for cand in range(math.isqrt(n), 0, -1):
+            if n % cand:
+                continue
+            a, b = cand, n // cand
+            if a % p == 0 and (rfft or b % p == 0):
+                n1, n2 = a, b
+                break
+        else:
+            raise ValueError(
+                f"no n1 x n2 = {n} factorization shards over {p} devices; "
+                f"pass n1/n2 explicitly"
+            )
+    if n1 * n2 != n:
+        raise ValueError(f"n1 * n2 = {n1}*{n2} != n = {n}")
+    if n1 % p:
+        raise ValueError(f"n1 = {n1} must be divisible by the mesh axis size {p}")
+    if not rfft and n2 % p:
+        raise ValueError(
+            f"n2 = {n2} must be divisible by the mesh axis size {p} "
+            f"(or use rfft=True, which pads the kept columns)"
+        )
+    return n1, n2
+
+
+class PlannedOperator:
+    """Mask-form ``diag(mask) C`` on the plan's mesh, acting on flat arrays.
+
+    This is the distributed RecoveryOperator view: ``matvec``/``rmatvec``
+    take flat (..., n) signals, run the sharded four-step transforms, and
+    return flat results — so the core drivers' metric/objective code and
+    ``RecoveryProblem`` construction work unchanged.  Measurements are in
+    the scattered full-length convention (``project_back`` is the identity).
+    """
+
+    def __init__(self, plan: "ExecutionPlan"):
+        self._plan = plan
+
+    @property
+    def n(self) -> int:
+        return self._plan.n1 * self._plan.n2
+
+    @property
+    def m(self) -> int:
+        return self.n  # mask form: measurements live scattered, length n
+
+    def matvec(self, x: Array) -> Array:
+        pl = self._plan
+        x2d = layout_2d(x, pl.n1, pl.n2)
+        return unlayout_2d(pl.mask2d * pl._apply(x2d, transpose=False))
+
+    def rmatvec(self, r: Array) -> Array:
+        # true adjoint of diag(mask) C: C^T diag(mask).  Solver residuals are
+        # already masked (mask * r == r), but the protocol promises A^T r for
+        # arbitrary full-length r.
+        pl = self._plan
+        r2d = pl.mask2d * layout_2d(r, pl.n1, pl.n2)
+        return unlayout_2d(pl._apply(r2d, transpose=True))
+
+    def operator_norm_bound(self) -> Array:
+        if self._plan.norm_bound is None:
+            raise ValueError("this plan carries no spectrum norm bound")
+        return self._plan.norm_bound
+
+    def project_back(self, y: Array) -> Array:
+        return y  # already scattered full-length
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExecutionPlan:
+    """An operator lowered to an execution backend (see module docstring).
+
+    Local plans (``mesh is None``) carry only the operator and knobs;
+    distributed plans additionally hold the column-sharded spectrum block
+    ``spec2d``, the row-sharded measurement mask ``mask2d``, and the
+    four-step factorization ``n1 x n2``.
+    """
+
+    op: Any = None
+    mesh: Any = None
+    n1: Optional[int] = None
+    n2: Optional[int] = None
+    rfft: bool = False
+    overlap: int = 1
+    tail: str = "jnp"
+    fused: bool = True
+    batch_axis: Any = None
+    axis_name: str = MODEL_AXIS
+    spec2d: Any = None
+    mask2d: Any = None
+    norm_bound: Any = None
+
+    # -- basic facts -------------------------------------------------------
+    @property
+    def is_distributed(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def operator(self):
+        """The RecoveryOperator view of this plan: the original operator on
+        one device, or the mask-form planned operator on the mesh."""
+        if not self.is_distributed:
+            return self.op
+        return PlannedOperator(self)
+
+    def matvec(self, x: Array) -> Array:
+        return self.operator.matvec(x)
+
+    def rmatvec(self, y: Array) -> Array:
+        return self.operator.rmatvec(y)
+
+    # -- sharding specs ----------------------------------------------------
+    def _row(self, batched: bool) -> P:
+        if batched:
+            return P(self.batch_axis, self.axis_name, None)
+        return P(self.axis_name, None)
+
+    def _col(self, batched: bool) -> P:
+        if batched:
+            return P(self.batch_axis, None, self.axis_name)
+        return P(None, self.axis_name)
+
+    # -- planned applications ---------------------------------------------
+    def _apply(self, x2d: Array, transpose: bool) -> Array:
+        """One sharded circulant application on layout-2d arrays (two
+        transpose-collectives; half-spectrum when ``rfft``)."""
+        local = rmatvec_local if self.rfft else matvec_local
+        batched = x2d.ndim > 2
+        fn = shard_map(
+            functools.partial(
+                local,
+                axis_name=self.axis_name,
+                transpose=transpose,
+                overlap=self.overlap,
+            ),
+            mesh=self.mesh,
+            in_specs=(self._col(False), self._row(batched)),
+            out_specs=self._row(batched),
+            check_vma=False,
+        )
+        return fn(self.spec2d, x2d)
+
+    def _scattered_measurements(self, problem) -> Array:
+        """problem.y -> the full-length scattered P^T y the mesh works in."""
+        y = problem.y
+        n = self.n1 * self.n2
+        if y.shape[-1] == n:
+            return y
+        if hasattr(problem.op, "project_back"):
+            return problem.op.project_back(y)
+        raise ValueError(
+            f"distributed plans need measurements of length n={n} (scattered "
+            f"P^T y) or an operator with project_back; got length {y.shape[-1]}"
+        )
+
+    # -- steppers (consumed by repro.core.solvers drivers) -----------------
+    def build_stepper(self, problem, method: str, alpha=1e-4, rho=0.1,
+                      sigma=0.1, tau=None):
+        """Lower (problem, method) to a core ``Stepper`` on this backend."""
+        if not self.is_distributed:
+            from repro.core.solvers import make_stepper
+
+            return make_stepper(
+                problem, method, alpha=alpha, rho=rho, sigma=sigma, tau=tau,
+                plan=self,
+            )
+        if method in _ISTA_METHODS:
+            return self._ista_stepper(problem, method, alpha, tau)
+        if method == "cpadmm":
+            return self._cpadmm_stepper(problem, alpha, rho, sigma, tau)
+        raise ValueError(
+            f"method {method!r} has no distributed lowering; valid "
+            f"distributed methods: ista, fista, cpista, cpadmm"
+        )
+
+    def _ista_stepper(self, problem, method: str, alpha, tau):
+        """Distributed CPISTA/FISTA: the core step math verbatim, with the
+        matvecs lowered to planned four-step transforms.  State lives in
+        the sharded (n1, n2) layout; ``extract`` flattens locally."""
+        from repro.core import ista as ista_mod
+        from repro.core.solvers import Stepper
+
+        y_full = self._scattered_measurements(problem)
+        if y_full.ndim > 2:
+            raise ValueError("distributed plans support one leading batch axis")
+        y2d = layout_2d(y_full, self.n1, self.n2)
+        dt = y_full.dtype
+        op2d = _Layout2DOperator(self)
+        tau_v = (
+            jnp.asarray(tau, dt) if tau is not None else ista_mod.default_tau(op2d)
+        )
+        p = ista_mod.IstaParams(alpha=jnp.asarray(alpha, dt), tau=tau_v)
+        step_fn = ista_mod.fista_step if method == "fista" else ista_mod.ista_step
+        zeros = jnp.zeros_like(y2d)
+        return Stepper(
+            init=lambda: ista_mod.IstaState(
+                x=zeros, x_prev=zeros, t_mom=jnp.ones((), dt)
+            ),
+            step=lambda s: step_fn(op2d, y2d, s, p),
+            extract=lambda s: unlayout_2d(s.x),
+        )
+
+    def _cpadmm_stepper(self, problem, alpha, rho, sigma, tau):
+        """Distributed CPADMM: the planned step functions of
+        :mod:`repro.dist.recovery` under a per-iteration shard_map."""
+        from repro.core.solvers import Stepper
+
+        y_full = self._scattered_measurements(problem)
+        if y_full.ndim > 2:
+            raise ValueError("distributed plans support one leading batch axis")
+        batched = y_full.ndim > 1
+        pty2d = layout_2d(y_full, self.n1, self.n2)
+        dt = y_full.dtype
+        t = 1.0 if tau is None else tau
+        p = DistCpadmmParams(
+            alpha=jnp.asarray(alpha, dt),
+            rho=jnp.asarray(rho, dt),
+            sigma=jnp.asarray(sigma, dt),
+            tau1=jnp.asarray(t, dt),
+            tau2=jnp.asarray(t, dt),
+        )
+        # Alg. 3 line 2, sharded: both inner inverses are local pointwise ops
+        b_spec = spectral.gram_inverse_spectrum(self.spec2d, p.rho, p.sigma)
+        d_diag = jnp.where(
+            self.mask2d > 0, 1.0 / (1.0 + p.rho), 1.0 / p.rho
+        ).astype(dt)
+        step_fn = dist_cpadmm_step_fused if self.fused else dist_cpadmm_step
+        rowS, rowB = self._row(False), self._row(batched)
+        state_spec = DistCpadmmState(*(rowB,) * 5)
+
+        def local_step(spec, bs, dd, pty, state, pp):
+            return step_fn(
+                spec, bs, dd, pty, state, pp,
+                self.axis_name, self.rfft, self.overlap, self.tail,
+            )
+
+        step_sm = shard_map(
+            local_step,
+            mesh=self.mesh,
+            in_specs=(
+                self._col(False), self._col(False), rowS, rowB, state_spec,
+                DistCpadmmParams(*(P(),) * 5),
+            ),
+            out_specs=state_spec,
+            check_vma=False,
+        )
+        zeros = jnp.zeros_like(pty2d)
+        return Stepper(
+            init=lambda: DistCpadmmState(zeros, zeros, zeros, zeros, zeros),
+            step=lambda s: step_sm(self.spec2d, b_spec, d_diag, pty2d, s, p),
+            extract=lambda s: unlayout_2d(s.z),
+        )
+
+    # -- abstract iteration block (dry-run / HLO-analysis entry point) -----
+    def cpadmm_block(self, iters: int, alpha=1e-4, rho=0.01, sigma=0.01,
+                     tau=1.0):
+        """Jitted ``block(spec, b_spec, d_diag, pty, state) -> state`` running
+        ``iters`` scanned iterations inside one shard_map — a pure function
+        of its operands, so ``.lower()`` with ShapeDtypeStructs exposes the
+        compiled HLO (launch/cs_dryrun.py's roofline walks it).  The state
+        (and pty) carry a leading batch dim sharded over ``batch_axis``."""
+        step_fn = dist_cpadmm_step_fused if self.fused else dist_cpadmm_step
+        p = DistCpadmmParams(
+            *(jnp.float32(v) for v in (alpha, rho, sigma, tau, tau))
+        )
+
+        def block(spec, b_spec, d_diag, pty, state):
+            def body(s, _):
+                return step_fn(
+                    spec, b_spec, d_diag, pty, s, p,
+                    self.axis_name, self.rfft, self.overlap, self.tail,
+                ), None
+
+            state, _ = lax.scan(body, state, None, length=iters)
+            return state
+
+        rowS, rowB, col = self._row(False), self._row(True), self._col(False)
+        state_spec = DistCpadmmState(*(rowB,) * 5)
+        return jax.jit(
+            shard_map(
+                block,
+                mesh=self.mesh,
+                in_specs=(col, col, rowS, rowB, state_spec),
+                out_specs=state_spec,
+                check_vma=False,
+            )
+        )
+
+
+class _Layout2DOperator:
+    """The plan's operator view in the native (n1, n2) sharded layout —
+    what the ISTA/FISTA step math consumes so iterates never leave the
+    sharded layout between iterations."""
+
+    def __init__(self, plan: ExecutionPlan):
+        self._plan = plan
+
+    def matvec(self, x2d: Array) -> Array:
+        pl = self._plan
+        return pl.mask2d * pl._apply(x2d, transpose=False)
+
+    def rmatvec(self, r2d: Array) -> Array:
+        # adjoint of diag(mask) C (the mask multiply is a bitwise no-op on
+        # the already-masked residuals the ISTA step feeds in)
+        pl = self._plan
+        return pl._apply(pl.mask2d * r2d, transpose=True)
+
+    def operator_norm_bound(self) -> Array:
+        if self._plan.norm_bound is None:
+            raise ValueError(
+                "plan has no operator norm bound; pass tau explicitly"
+            )
+        return self._plan.norm_bound
+
+
+def plan(
+    op,
+    mesh=None,
+    *,
+    n1: Optional[int] = None,
+    n2: Optional[int] = None,
+    rfft: bool = False,
+    overlap: int = 1,
+    tail: str = "jnp",
+    fused: bool = True,
+    batch_axis: Any = None,
+    axis_name: str = MODEL_AXIS,
+) -> ExecutionPlan:
+    """Lower ``op`` to an execution plan (see module docstring).
+
+    With ``mesh=None`` this is the identity lowering: ``plan(op).operator``
+    *is* ``op``, so every matvec is bit-exact with the core path.  With a
+    mesh, ``op`` must be a (partial) circulant: the plan eagerly computes
+    the column-sharded spectrum of C (half layout when ``rfft``) and the
+    row-sharded measurement mask, and lowers matvecs / solver steps to the
+    four-step transforms.  ``n1``/``n2`` pick the layout factorization
+    (auto-chosen near sqrt(n) when omitted).
+    """
+    if tail not in ("jnp", "pallas"):
+        raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
+    if mesh is None:
+        if rfft or overlap != 1:
+            raise ValueError(
+                "rfft/overlap are distributed-backend knobs (the sharded "
+                "four-step transforms); pass a mesh to use them — a local "
+                "plan would silently ignore them"
+            )
+        return ExecutionPlan(op=op, tail=tail, fused=fused)
+    if hasattr(op, "circ"):  # PartialCirculant: mask = indicator of omega
+        circ, omega = op.circ, op.omega
+    elif hasattr(op, "spec") and hasattr(op, "col"):  # full Circulant
+        circ, omega = op, None
+    else:
+        raise TypeError(
+            f"distributed plans need a (partial) circulant operator, got "
+            f"{type(op).__name__}"
+        )
+    n = circ.n
+    p = mesh.shape[axis_name]
+    n1, n2 = _factorize(n, n1, n2, p, rfft)
+    if omega is None:
+        mask = jnp.ones((n,), circ.col.dtype)
+    else:
+        mask = jnp.zeros((n,), circ.col.dtype).at[omega].set(1.0)
+    spec2d = make_dist_spectrum(mesh, axis_name, rfft)(layout_2d(circ.col, n1, n2))
+    return ExecutionPlan(
+        op=op,
+        mesh=mesh,
+        n1=n1,
+        n2=n2,
+        rfft=rfft,
+        overlap=overlap,
+        tail=tail,
+        fused=fused,
+        batch_axis=batch_axis,
+        axis_name=axis_name,
+        spec2d=spec2d,
+        mask2d=layout_2d(mask, n1, n2),
+        norm_bound=op.operator_norm_bound(),
+    )
+
+
+def plan_from_parts(
+    mesh,
+    spec2d=None,
+    mask2d=None,
+    *,
+    n1: int,
+    n2: int,
+    rfft: bool = False,
+    overlap: int = 1,
+    tail: str = "jnp",
+    fused: bool = True,
+    batch_axis: Any = None,
+    axis_name: str = MODEL_AXIS,
+) -> ExecutionPlan:
+    """Distributed plan from pre-sharded parts instead of an operator.
+
+    For callers that already live in the sharded representation: the
+    deprecation shim ``repro.dist.recovery.make_dist_cpadmm`` (spectrum and
+    mask arrive as arrays) and the abstract lowering in
+    ``launch/cs_dryrun.py`` (no concrete arrays at all — only
+    :meth:`ExecutionPlan.cpadmm_block` is used).  ``spec2d`` is the
+    column-sharded spectrum of C with the matching ``rfft`` layout;
+    ``mask2d`` the row-sharded 0/1 measurement indicator.
+    """
+    if tail not in ("jnp", "pallas"):
+        raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
+    norm = jnp.max(jnp.abs(spec2d)) if spec2d is not None else None
+    return ExecutionPlan(
+        mesh=mesh,
+        n1=n1,
+        n2=n2,
+        rfft=rfft,
+        overlap=overlap,
+        tail=tail,
+        fused=fused,
+        batch_axis=batch_axis,
+        axis_name=axis_name,
+        spec2d=spec2d,
+        mask2d=mask2d,
+        norm_bound=norm,
+    )

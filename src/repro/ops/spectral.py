@@ -1,0 +1,89 @@
+"""Shared spectral helpers: the one home for rfft bookkeeping.
+
+Every layer of the stack manipulates spectra of *real* signals, so the
+half-spectrum (rfft) representation and its Hermitian bookkeeping show up
+everywhere: the single-device circulant algebra (``repro.core.circulant``
+stores eigenvalues as ``rfft(first column)``), the CPADMM inner inverse
+(``repro.core.admm``), and the distributed four-step transforms
+(``repro.dist.fft`` keeps ``n2//2 + 1`` columns on the wire).  These
+helpers used to be copied privately between ``core/circulant.py`` and
+``dist/fft.py``; they live here once, dependency-free (jax only), so both
+import the same definitions.
+
+Conventions: 1-D transforms act on the trailing axis and broadcast over
+leading batch axes; ``n2``/``p`` in the half-spectrum helpers refer to the
+four-step layout's column count and mesh size (see ``repro.dist.fft``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# trailing-axis real FFT pair (the core circulant algebra's workhorses)
+# --------------------------------------------------------------------------
+
+
+def rfft(x: Array, n: int) -> Array:
+    """Length-``n`` real FFT along the trailing axis."""
+    return jnp.fft.rfft(x, n=n, axis=-1)
+
+
+def irfft(x: Array, n: int) -> Array:
+    """Length-``n`` inverse real FFT along the trailing axis."""
+    return jnp.fft.irfft(x, n=n, axis=-1)
+
+
+def apply_spectrum(spec: Array, x: Array, n: int) -> Array:
+    """``irfft(spec * rfft(x))`` — one circulant application by the
+    convolution theorem (paper Sec. 4's C = F^H diag(spec) F identity)."""
+    return irfft(spec * rfft(x, n), n)
+
+
+def gram_inverse_spectrum(spec: Array, rho, sigma) -> Array:
+    """Spectrum of ``(rho C^T C + sigma I)^{-1}`` from the spectrum of C.
+
+    Paper Alg. 3 line 2: ``spec(rho C^T C + sigma I) = rho |spec|^2 + sigma``
+    (real, positive), so the inverse is the pointwise reciprocal — the
+    O(n log n) inversion that replaces the dense O(n^3) one.  Works on any
+    spectrum layout (full, half, or the distributed column-sharded block):
+    the identity is pointwise.
+    """
+    return (1.0 / (rho * jnp.abs(spec) ** 2 + sigma)).astype(spec.dtype)
+
+
+# --------------------------------------------------------------------------
+# half-spectrum (rfft) bookkeeping for the four-step (n1, n2) layout
+# --------------------------------------------------------------------------
+
+
+def rfft_len(n2: int) -> int:
+    """Kept columns of the half spectrum: k2 in [0, n2//2]."""
+    return n2 // 2 + 1
+
+
+def padded_rfft_len(n2: int, p: int) -> int:
+    """Kept columns zero-padded up to a multiple of the mesh size ``p`` so
+    the transpose-collective can split them evenly on any device count."""
+    nf = rfft_len(n2)
+    return -(-nf // p) * p
+
+
+def half_to_full(Fh: Array, n2: int) -> Array:
+    """Half-spectrum layout (..., n1, >=nf) -> full spectrum (..., n1, n2).
+
+    The discarded columns follow from Hermitian symmetry of the flat DFT,
+    ``X[n - k] = conj(X[k])``: with ``k = n2*k1 + k2`` that reads
+
+        F[k1, k2] = conj(F[n1 - 1 - k1, n2 - k2])    for k2 in [nf, n2).
+
+    Verification/bridging helper — solvers never materialize the full half.
+    """
+    nf = rfft_len(n2)
+    Fh = Fh[..., :nf]
+    tail = jnp.flip(jnp.conj(Fh[..., 1 : n2 - nf + 1]), axis=(-2, -1))
+    return jnp.concatenate([Fh, tail], axis=-1)

@@ -12,6 +12,7 @@ PROGS = [
     "recovery_prog.py",
     "fused_recovery_prog.py",
     "batched_recovery_prog.py",
+    "ista_prog.py",
     "overlap_prog.py",
     "train_prog.py",
     "compression_prog.py",

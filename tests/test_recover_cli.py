@@ -1,0 +1,70 @@
+"""launch/recover CLI: method/mesh flags routed through the plan API.
+
+In-process invocations of ``repro.launch.recover.main`` at tiny sizes — the
+fast-lane coverage for the production launcher (the 8-device forms run via
+``--fake-devices`` as a script; here the 1-device mesh exercises the same
+plan routing).
+"""
+
+import jax
+import pytest
+
+from repro.launch import recover
+
+
+def test_tol_mode_with_mesh_plan(capsys):
+    recover.main([
+        "--n", "512", "--batch", "2", "--method", "fista", "--iters", "80",
+        "--tol", "1e-3", "--mesh", "1", "--rfft",
+    ])
+    out = capsys.readouterr().out
+    assert "mesh=1 (plan API)" in out
+    assert "per-signal iterations" in out
+    assert "per-signal MSE" in out
+
+
+def test_checkpointed_mode_resumes(tmp_path, capsys):
+    args = [
+        "--n", "512", "--batch", "2", "--method", "cpadmm", "--iters", "60",
+        "--chunk", "30", "--mesh", "1", "--ckpt-dir", str(tmp_path / "ck"),
+    ]
+    recover.main(args)
+    first = capsys.readouterr().out
+    assert "per-signal MSE" in first and "resumed" not in first
+    recover.main(args)  # latest checkpoint (iter 60) is picked up
+    assert "resumed from iteration 60" in capsys.readouterr().out
+
+
+def test_local_backend_default(capsys):
+    recover.main([
+        "--n", "512", "--batch", "1", "--method", "ista", "--iters", "40",
+        "--tol", "1e-2",
+    ])
+    out = capsys.readouterr().out
+    assert "plan API" not in out and "per-signal iterations" in out
+
+
+def test_method_error_lists_valid_methods(capsys):
+    with pytest.raises(SystemExit):
+        recover.main(["--method", "newton", "--n", "512"])
+    err = capsys.readouterr().err
+    assert "cpadmm" in err and "ista" in err and "fista" in err
+
+
+def test_bad_mesh_spec_rejected():
+    op = None  # build_plan validates the spec before touching the operator
+    with pytest.raises(ValueError, match="--mesh"):
+        recover.build_plan(op, "2x2x2")
+
+
+def test_build_plan_shapes():
+    from repro.core import partial_gaussian_circulant
+    from repro.ops import ExecutionPlan
+
+    op = partial_gaussian_circulant(jax.random.PRNGKey(0), 512, 256)
+    pl = recover.build_plan(op, None)
+    assert isinstance(pl, ExecutionPlan) and not pl.is_distributed
+    pl = recover.build_plan(op, "1", rfft=True)
+    assert pl.is_distributed and pl.rfft and pl.batch_axis is None
+    pl = recover.build_plan(op, "1x1")
+    assert pl.is_distributed and pl.batch_axis == "data"
