@@ -3,7 +3,14 @@
 128x128 synthetic starfield (statistically matched to the paper's ~10%-lit
 Abell-2744 frame), order-5 raster blur, m = n/2, CPADMM recovery.  Paper
 criterion: original-vs-recovered MSE of order 1e-2 on [0,255]-scaled pixels,
-i.e. normalized MSE of order 1e-4; we report normalized MSE directly."""
+i.e. normalized MSE of order 1e-4; we report normalized MSE directly.
+
+Since ISSUE 5 the same solve also runs through the execution-plan layer
+(``build_deblur_plan`` on a 1-device mesh — the sharded four-step transforms
+with a trivial collective): the ``deblur_planned[_rfft]`` rows track the
+overhead of the planned lowering vs the single-device path, full-complex vs
+half-spectrum, on identical numerics (pinned at 1e-5 in tests/test_deblur.py).
+"""
 
 from __future__ import annotations
 
@@ -22,10 +29,12 @@ def main() -> None:
     from repro.core import RecoveryProblem, solve
     from repro.core.deblur import (
         blurred_observation,
+        build_deblur_plan,
         build_deblur_problem,
         deblur_metrics,
     )
     from repro.data.synthetic import starfield
+    from repro.dist.compat import make_mesh
 
     img = starfield(jax.random.PRNGKey(0), H, W, density=0.10, n_blobs=8)
     p = build_deblur_problem(
@@ -51,6 +60,25 @@ def main() -> None:
         f"err_over_mean_intensity={float(m['mean_abs_err_over_mean_intensity']):.4f};"
         f"iters={ITERS}",
     )
+
+    # single vs planned, full-complex vs rfft: the plan-overhead rows
+    mesh = make_mesh((1,), ("model",))
+    for tag, rfft in (("planned", False), ("planned_rfft", True)):
+        pl = build_deblur_plan(p, mesh, rfft=rfft)
+
+        t0 = time.perf_counter()
+        xp, _ = solve(prob, "cpadmm", iters=ITERS, record_every=ITERS,
+                      alpha=1e-3, rho=0.01, sigma=0.01, plan=pl)
+        jax.block_until_ready(xp)
+        wall_p = time.perf_counter() - t0
+
+        mp = deblur_metrics(p, xp)
+        emit(
+            f"deblur_{tag}_{H}x{W}",
+            wall_p * 1e6,
+            f"normalized_mse={float(mp['normalized_mse']):.2e};"
+            f"vs_single={wall_p / wall:.2f}x;iters={ITERS}",
+        )
 
 
 if __name__ == "__main__":

@@ -104,9 +104,20 @@ class Circulant:
         )
 
     def compose(self, other: "Circulant") -> "Circulant":
-        """self @ other — circulants commute and multiply spectra."""
-        assert self.n == other.n, (self.n, other.n)
-        return Circulant.from_spectrum(self.spec * other.spec, self.n)
+        """self @ other — circulants commute and multiply spectra.
+
+        The composed operator stores the *exact* pointwise product spectrum
+        (what every matvec / gram-inverse consumes) with its first column
+        derived from it once — no irfft→rfft round trip, so composition is
+        sheer bookkeeping and ``plan()`` can shard the product directly.
+        """
+        if self.n != other.n:
+            raise ValueError(
+                f"cannot compose circulants of different sizes: "
+                f"n={self.n} vs n={other.n}"
+            )
+        spec = self.spec * other.spec
+        return Circulant(col=_irfft(spec, self.n), spec=spec)
 
     def add_scaled_identity(self, rho: float, sigma: float) -> "Circulant":
         """rho * C + sigma * I."""
@@ -267,13 +278,29 @@ def partial_romberg_circulant(
 
 
 def moving_average_blur(n: int, order: int, dtype=jnp.float32) -> Circulant:
-    """Order-L blur: first row = [1/L]*L then zeros, right-circulated (Sec. 7)."""
+    """Order-L blur: first row = [1/L]*L then zeros, right-circulated (Sec. 7).
+
+    ``order`` must lie in (0, n]: a longer filter would silently truncate
+    (``.at[:order].set`` clips out-of-range indices) and the kernel would no
+    longer sum to 1.
+    """
+    if not 0 < order <= n:
+        raise ValueError(
+            f"blur order must satisfy 0 < order <= n; got order={order}, n={n} "
+            f"(an order > n filter would wrap past the signal and truncate)"
+        )
     row = jnp.zeros((n,), dtype).at[:order].set(1.0 / order)
     return Circulant.from_first_row(row)
 
 
 def compose_sensing_blur(sense: Circulant, blur: Circulant) -> Circulant:
     """A = C @ B — still circulant (the key Sec. 7 observation)."""
+    if sense.n != blur.n:
+        raise ValueError(
+            f"sensing and blur operators act on different signal lengths: "
+            f"sense.n={sense.n} vs blur.n={blur.n}; build both for the same "
+            f"flattened image size"
+        )
     return sense.compose(blur)
 
 

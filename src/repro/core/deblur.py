@@ -15,6 +15,14 @@ observed through the same optics (Herschel/PACS-style map-making), so
 ``build_multiframe_deblur_problem`` senses a (F, H, W) stack through one
 shared operator and every helper here broadcasts over leading frame axes —
 one batched CPADMM solve deblurs the whole stack.
+
+Backends: ``build_deblur_plan`` lowers the joint operator through the
+execution-plan layer (``repro.ops.plan``) — the same deblur solve runs
+single-device or sharded over a mesh (frames over the data axis, each
+frame's transforms over the model axis), with the composed spectrum
+``spec(C)·spec(B)`` built and sharded exactly once.  The distributed solve
+is pinned to the single-device one at 1e-5 rel (tests/test_deblur.py,
+tests/dist_progs/deblur_prog.py).
 """
 
 from __future__ import annotations
@@ -56,6 +64,12 @@ def build_deblur_problem(
     ``sensing='gaussian'`` is paper-faithful; ``'romberg'`` is the
     beyond-paper well-conditioned variant (see circulant.py).
     """
+    if image.ndim != 2:
+        raise ValueError(
+            f"build_deblur_problem takes a single (H, W) image; got shape "
+            f"{tuple(image.shape)} — for a frame stack use "
+            f"build_multiframe_deblur_problem"
+        )
     h, w = image.shape
     n = h * w
     m = int(round(n * subsample))
@@ -87,7 +101,12 @@ def build_multiframe_deblur_problem(
     recovers the whole stack: build a ``RecoveryProblem`` with the returned
     op and the batched ``y`` and call ``core.solvers.solve`` as usual.
     """
-    assert images.ndim >= 3, "expected a (..., F, H, W)-like frame stack"
+    if images.ndim < 3:
+        raise ValueError(
+            f"build_multiframe_deblur_problem takes a (..., F, H, W)-like "
+            f"frame stack (ndim >= 3); got shape {tuple(images.shape)} — for "
+            f"a single image use build_deblur_problem"
+        )
     single = build_deblur_problem(
         key, images.reshape(-1, *images.shape[-2:])[0],
         blur_order=blur_order, subsample=subsample, sensing=sensing,
@@ -96,6 +115,62 @@ def build_multiframe_deblur_problem(
     x = images.reshape(images.shape[:-2] + (n,))
     return DeblurProblem(
         op=single.op, blur=single.blur, y=single.op.matvec(x), image=images
+    )
+
+
+def build_deblur_plan(
+    problem: DeblurProblem,
+    mesh=None,
+    *,
+    n1: int | None = None,
+    n2: int | None = None,
+    rfft: bool = False,
+    overlap: int = 1,
+    tail: str = "jnp",
+    fused: bool = True,
+    batch_axis: str | None = None,
+    axis_name: str = "model",
+):
+    """Lower the joint sensing+blur operator ``A = P (C B)`` to a backend.
+
+    The paper's flagship scenario on any backend: with ``mesh=None`` the
+    identity lowering (the single-device solve); with a mesh, the composed
+    spectrum ``spec(C)·spec(B)`` — already stored on the operator — is laid
+    out and column-sharded once (no dense/time-domain round trip; see
+    ``repro.ops.spectral.spectrum_layout_2d``) and every solver method runs
+    through the sharded four-step transforms.
+
+    Defaults are deblur-aware: the four-step factorization ``n1 x n2`` is
+    the image's own (H, W) grid whenever it shards over the mesh axis (so
+    the layout matches the raster the blur acts along), and a multi-frame
+    stack is sharded over the mesh's ``data`` axis when one exists — one
+    batched distributed solve deblurs the whole stack, every frame sharing
+    each transform's single all-to-all.  ``rfft`` / ``overlap`` / ``tail``
+    are the usual plan knobs (half-spectrum transforms, chunked-transpose
+    overlap, fused elementwise tail).
+    """
+    from repro.ops import plan as _plan
+
+    if mesh is None:
+        # forward rfft/overlap so plan()'s distributed-knobs-without-a-mesh
+        # guard raises instead of silently ignoring them
+        return _plan(problem.op, rfft=rfft, overlap=overlap, tail=tail,
+                     fused=fused)
+    h, w = problem.image.shape[-2:]
+    if n1 is None and n2 is None:
+        p = mesh.shape[axis_name]
+        if h % p == 0 and (rfft or w % p == 0):
+            n1, n2 = h, w
+    if (
+        batch_axis is None
+        and problem.image.ndim > 2
+        and "data" in mesh.axis_names
+        and axis_name != "data"
+    ):
+        batch_axis = "data"
+    return _plan(
+        problem.op, mesh, n1=n1, n2=n2, rfft=rfft, overlap=overlap,
+        tail=tail, fused=fused, batch_axis=batch_axis, axis_name=axis_name,
     )
 
 
@@ -114,7 +189,10 @@ def deblur_metrics(problem: DeblurProblem, x: Array) -> dict:
     """Paper Sec. 7 metrics + PSNR, per frame over leading batch axes.
 
     ``x`` is (..., n); each metric comes back with the batch shape (scalars
-    when unbatched).  PSNR uses the ground-truth peak intensity per frame.
+    when unbatched).  PSNR uses the ground-truth peak intensity per frame;
+    an all-zero frame has no peak to reference, so its PSNR is the ``-inf``
+    sentinel rather than the misleading finite number an epsilon'd peak
+    would produce.
     """
     shape = problem.image.shape
     truth = problem.image.reshape(shape[:-2] + (-1,))
@@ -122,10 +200,16 @@ def deblur_metrics(problem: DeblurProblem, x: Array) -> dict:
     mse = jnp.mean(err * err, axis=-1)
     scale = jnp.mean(truth * truth, axis=-1) + 1e-12
     mean_int = jnp.mean(truth, axis=-1) + 1e-12
-    peak = jnp.max(jnp.abs(truth), axis=-1) + 1e-12
+    peak = jnp.max(jnp.abs(truth), axis=-1)
+    safe_peak = jnp.where(peak > 0, peak, 1.0)  # keep the log10 NaN-free
+    psnr = jnp.where(
+        peak > 0,
+        10.0 * jnp.log10(safe_peak * safe_peak / (mse + 1e-20)),
+        -jnp.inf,
+    )
     return {
         "mse": mse,
         "normalized_mse": mse / scale,
         "mean_abs_err_over_mean_intensity": jnp.mean(jnp.abs(err), axis=-1) / mean_int,
-        "psnr_db": 10.0 * jnp.log10(peak * peak / (mse + 1e-20)),
+        "psnr_db": psnr,
     }

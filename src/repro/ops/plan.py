@@ -61,7 +61,6 @@ from repro.dist.recovery import (
     DistCpadmmState,
     dist_cpadmm_step,
     dist_cpadmm_step_fused,
-    make_dist_spectrum,
 )
 
 from . import spectral
@@ -414,11 +413,14 @@ def plan(
 
     With ``mesh=None`` this is the identity lowering: ``plan(op).operator``
     *is* ``op``, so every matvec is bit-exact with the core path.  With a
-    mesh, ``op`` must be a (partial) circulant: the plan eagerly computes
-    the column-sharded spectrum of C (half layout when ``rfft``) and the
-    row-sharded measurement mask, and lowers matvecs / solver steps to the
-    four-step transforms.  ``n1``/``n2`` pick the layout factorization
-    (auto-chosen near sqrt(n) when omitted).
+    mesh, ``op`` must be a (partial) circulant: the plan lays the operator's
+    *stored half spectrum* out into the column-sharded four-step layout
+    (``spectral.spectrum_layout_2d`` — pure bookkeeping, no irfft back to
+    the first column and no distributed FFT of it, so a composed operator
+    like the Sec. 7 deblur spectrum ``spec(C)·spec(B)`` is built and sharded
+    exactly once) plus the row-sharded measurement mask, and lowers matvecs
+    / solver steps to the four-step transforms.  ``n1``/``n2`` pick the
+    layout factorization (auto-chosen near sqrt(n) when omitted).
     """
     if tail not in ("jnp", "pallas"):
         raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
@@ -446,7 +448,14 @@ def plan(
         mask = jnp.ones((n,), circ.col.dtype)
     else:
         mask = jnp.zeros((n,), circ.col.dtype).at[omega].set(1.0)
-    spec2d = make_dist_spectrum(mesh, axis_name, rfft)(layout_2d(circ.col, n1, n2))
+    # the spectrum is already stored on the operator (half layout): re-lay it
+    # out for the four-step transforms and shard the columns — no transform
+    # runs here, so composed spectra (deblur's spec(C)·spec(B)) never round-
+    # trip through the time domain
+    spec2d = jax.device_put(
+        spectral.spectrum_layout_2d(circ.spec, n1, n2, rfft=rfft, p=p),
+        jax.sharding.NamedSharding(mesh, P(None, axis_name)),
+    )
     return ExecutionPlan(
         op=op,
         mesh=mesh,

@@ -61,6 +61,45 @@ def gram_inverse_spectrum(spec: Array, rho, sigma) -> Array:
 # --------------------------------------------------------------------------
 
 
+def full_from_half(spec_h: Array, n: int) -> Array:
+    """Flat half spectrum (..., n//2 + 1) -> full flat DFT (..., n).
+
+    Hermitian symmetry of a real signal's DFT, ``X[n - k] = conj(X[k])``,
+    reconstructs the discarded bins.  This is pure bookkeeping (a conjugate
+    flip + concatenate) — no transform runs, which is what lets a circulant's
+    stored half spectrum be re-laid-out for any backend without a time-domain
+    round trip (see :func:`spectrum_layout_2d`).  The flat case is
+    :func:`half_to_full` on a single-row (n1 = 1) layout — one home for the
+    symmetry math.
+    """
+    return half_to_full(spec_h[..., None, :], n)[..., 0, :]
+
+
+def spectrum_layout_2d(
+    spec_h: Array, n1: int, n2: int, *, rfft: bool = False, p: int = 1
+) -> Array:
+    """Flat half spectrum -> the four-step ``(n1, n2)`` spectrum layout.
+
+    The four-step transform of :mod:`repro.dist.fft` produces
+    ``F[k1, k2] = X[n2*k1 + k2]``, so the layout is a plain row-major reshape
+    of the full flat DFT — meaning a circulant whose spectrum is already
+    known (e.g. the composed sensing+blur operator ``spec(C)·spec(B)`` of
+    paper Sec. 7) lowers onto the mesh with *zero* transforms: no irfft back
+    to the first column, no distributed FFT of it.  ``rfft=True`` returns
+    the half layout the rfft solver path consumes — the kept columns
+    ``k2 in [0, n2//2]`` zero-padded to a multiple of the mesh size ``p``
+    (matching ``rfft2_local``'s output exactly).
+    """
+    n = n1 * n2
+    F = full_from_half(spec_h, n).reshape(spec_h.shape[:-1] + (n1, n2))
+    if not rfft:
+        return F
+    nf, nf_pad = rfft_len(n2), padded_rfft_len(n2, p)
+    pads = [(0, 0)] * F.ndim
+    pads[-1] = (0, nf_pad - nf)
+    return jnp.pad(F[..., :nf], pads)
+
+
 def rfft_len(n2: int) -> int:
     """Kept columns of the half spectrum: k2 in [0, n2//2]."""
     return n2 // 2 + 1

@@ -196,6 +196,44 @@ def test_blur_composition_is_product():
     )
 
 
+def test_compose_spectrum_is_exact_product():
+    """Composition stores the pointwise product spectrum bit-exactly — no
+    irfft->rfft round trip (what lets plan() shard composed spectra as-is)."""
+    C = gaussian_circulant(jax.random.PRNGKey(2), 32)
+    B = moving_average_blur(32, 5)
+    np.testing.assert_array_equal(
+        np.asarray(C.compose(B).spec), np.asarray(C.spec * B.spec)
+    )
+
+
+def test_moving_average_blur_validates_order():
+    """order > n used to silently truncate (.at[:order].set clips) so the
+    kernel no longer summed to 1; now it is a loud error."""
+    with pytest.raises(ValueError, match="order"):
+        moving_average_blur(8, 9)
+    with pytest.raises(ValueError, match="order"):
+        moving_average_blur(8, 0)
+    with pytest.raises(ValueError, match="order"):
+        moving_average_blur(8, -3)
+    # order == n is the legal extreme: the full-window average
+    B = moving_average_blur(8, 8)
+    np.testing.assert_allclose(np.asarray(B.col), np.full(8, 1 / 8), atol=1e-7)
+    for order in (1, 3, 8):
+        s = float(moving_average_blur(8, order).col.sum())
+        assert s == pytest.approx(1.0, abs=1e-6), order
+
+
+def test_compose_rejects_size_mismatch():
+    """n mismatch raises a shape error up front, not a cryptic spectral
+    broadcast failure deep in the rfft algebra."""
+    C = gaussian_circulant(jax.random.PRNGKey(0), 16)
+    B = moving_average_blur(32, 3)
+    with pytest.raises(ValueError, match="different sizes: n=16 vs n=32"):
+        C.compose(B)
+    with pytest.raises(ValueError, match="different signal lengths"):
+        compose_sensing_blur(C, B)
+
+
 # ---------------------------------------------------------------------------
 # Memory-footprint claim (paper Fig. 3): O(n) vs O(n^2)
 # ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@ PROGS = [
     "batched_recovery_prog.py",
     "ista_prog.py",
     "overlap_prog.py",
+    "deblur_prog.py",
     "train_prog.py",
     "compression_prog.py",
 ]

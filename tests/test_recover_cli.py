@@ -44,6 +44,29 @@ def test_local_backend_default(capsys):
     assert "plan API" not in out and "per-signal iterations" in out
 
 
+def test_deblur_workload_checkpointed_with_mesh_plan(tmp_path, capsys):
+    """--deblur routes through build_deblur_plan on a (data, model) mesh and
+    reports per-frame PSNR after the checkpointed solve."""
+    recover.main([
+        "--deblur", "--batch", "2", "--size", "16", "--blur-order", "3",
+        "--iters", "40", "--chunk", "20", "--mesh", "1x1", "--rfft",
+        "--ckpt-dir", str(tmp_path / "ck"),
+    ])
+    out = capsys.readouterr().out
+    assert "deblurring batch=2 frames of 16x16" in out
+    assert "mesh=1x1 (plan API)" in out
+    assert "PSNR" in out and "normalized MSE" in out
+
+
+def test_deblur_workload_tol_mode_local(capsys):
+    recover.main([
+        "--deblur", "--batch", "1", "--size", "16", "--iters", "40",
+        "--tol", "1e-2",
+    ])
+    out = capsys.readouterr().out
+    assert "per-signal iterations" in out and "PSNR" in out
+
+
 def test_method_error_lists_valid_methods(capsys):
     with pytest.raises(SystemExit):
         recover.main(["--method", "newton", "--n", "512"])
