@@ -38,14 +38,42 @@ import sys
 from collections import defaultdict
 
 
+def _suite_of(name: str, row: dict) -> str:
+    return row.get("suite", name.split("_", 1)[0])
+
+
 def load_rows(path: str) -> dict:
-    with open(path) as f:
-        data = json.load(f)
-    return {r["name"]: r for r in data["rows"]}
+    """Parse one BENCH artifact, failing loudly (not with a KeyError
+    traceback) on files that are not benchmarks/run.py output."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        raise SystemExit(f"compare: cannot read {path}: {e}")
+    except ValueError as e:
+        raise SystemExit(f"compare: {path} is not valid JSON: {e}")
+    if not isinstance(data, dict) or not isinstance(data.get("rows"), list):
+        raise SystemExit(
+            f"compare: {path} has no 'rows' list — not a benchmarks/run.py "
+            f"artifact?"
+        )
+    rows = {}
+    for i, r in enumerate(data["rows"]):
+        if not isinstance(r, dict) or "name" not in r or "us_per_call" not in r:
+            raise SystemExit(
+                f"compare: {path} rows[{i}] lacks 'name'/'us_per_call': {r!r}"
+            )
+        rows[r["name"]] = r
+    return rows
 
 
 def compare(baseline: dict, fresh: dict, threshold: float, min_us: float):
-    """-> (per-suite geomean ratios, missing row names)."""
+    """-> (per-suite geomean ratios, missing row names, missing suite names).
+
+    A suite present in the baseline but absent from the fresh run is its own
+    loud failure (not just N missing rows): that is what a suite being
+    dropped from the runner registration looks like.
+    """
     ratios = defaultdict(list)
     missing = []
     for name, base_row in baseline.items():
@@ -55,18 +83,19 @@ def compare(baseline: dict, fresh: dict, threshold: float, min_us: float):
             continue
         if base_row["us_per_call"] < min_us:
             continue  # dispatch-overhead row: pure jitter at smoke sizes
-        suite = base_row.get("suite", name.split("_", 1)[0])
-        ratios[suite].append(
+        ratios[_suite_of(name, base_row)].append(
             max(new_row["us_per_call"], 1e-3) / max(base_row["us_per_call"], 1e-3)
         )
     geo = {
         suite: math.exp(sum(math.log(r) for r in rs) / len(rs))
         for suite, rs in ratios.items()
     }
-    return geo, missing
+    base_suites = {_suite_of(n, r) for n, r in baseline.items()}
+    fresh_suites = {_suite_of(n, r) for n, r in fresh.items()}
+    return geo, missing, sorted(base_suites - fresh_suites)
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", help="freshly produced BENCH_smoke.json")
     ap.add_argument("--baseline", default="benchmarks/baseline_smoke.json")
@@ -78,9 +107,9 @@ def main() -> None:
         "--min-us", type=float, default=200.0,
         help="skip baseline rows faster than this (dispatch-overhead noise)",
     )
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    geo, missing = compare(
+    geo, missing, missing_suites = compare(
         load_rows(args.baseline), load_rows(args.fresh), args.threshold, args.min_us
     )
     ratios = sorted(geo.values())
@@ -92,6 +121,12 @@ def main() -> None:
         verdict = "OK" if ratio <= args.threshold else "REGRESSED"
         failed |= ratio > args.threshold
         print(f"{suite:20s} geomean {geo[suite]:5.2f}x  normalized {ratio:5.2f}x  {verdict}")
+    if missing_suites:
+        failed = True
+        print(
+            f"MISSING suites (in baseline, absent from fresh run — dropped "
+            f"from the runner registration?): {missing_suites}"
+        )
     if missing:
         failed = True
         print(f"MISSING rows (in baseline, absent from fresh run): {missing}")

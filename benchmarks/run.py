@@ -30,6 +30,7 @@ SUITE_NAMES = (
     "batched_recovery",  # beyond-paper: data-axis batching amortization
     "overlap",  # beyond-paper: chunked-transpose overlap sweep
     "dist_ista",  # beyond-paper: plan-API distributed CPISTA/FISTA overhead
+    "autotune",  # beyond-paper: cost-model plan autotuner vs hand-picked
 )
 
 

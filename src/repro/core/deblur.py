@@ -27,6 +27,7 @@ tests/dist_progs/deblur_prog.py).
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
@@ -122,14 +123,17 @@ def build_deblur_plan(
     problem: DeblurProblem,
     mesh=None,
     *,
+    config=None,
+    tune=False,
+    batch: int | None = None,
     n1: int | None = None,
     n2: int | None = None,
-    rfft: bool = False,
-    overlap: int = 1,
-    tail: str = "jnp",
-    fused: bool = True,
+    rfft: bool | None = None,
+    overlap: int | None = None,
+    tail: str | None = None,
+    fused: bool | None = None,
     batch_axis: str | None = None,
-    axis_name: str = "model",
+    axis_name: str | None = None,
 ):
     """Lower the joint sensing+blur operator ``A = P (C B)`` to a backend.
 
@@ -140,37 +144,64 @@ def build_deblur_plan(
     ``repro.ops.spectral.spectrum_layout_2d``) and every solver method runs
     through the sharded four-step transforms.
 
-    Defaults are deblur-aware: the four-step factorization ``n1 x n2`` is
-    the image's own (H, W) grid whenever it shards over the mesh axis (so
-    the layout matches the raster the blur acts along), and a multi-frame
-    stack is sharded over the mesh's ``data`` axis when one exists — one
-    batched distributed solve deblurs the whole stack, every frame sharing
-    each transform's single all-to-all.  ``rfft`` / ``overlap`` / ``tail``
-    are the usual plan knobs (half-spectrum transforms, chunked-transpose
-    overlap, fused elementwise tail).
+    Knobs arrive as ``config=repro.ops.PlanConfig(...)`` or as the
+    individual keyword arguments (the compat path; mixing the two is an
+    error, validated by ``repro.ops.resolve_plan_config`` like every other
+    plan entry point).  Compat-path defaults are deblur-aware: the
+    four-step factorization ``n1 x n2`` is the image's own (H, W) grid
+    whenever it shards over the mesh axis (so the layout matches the raster
+    the blur acts along), and a multi-frame stack is sharded over the
+    mesh's ``data`` axis when one exists — one batched distributed solve
+    deblurs the whole stack, every frame sharing each transform's single
+    all-to-all.  A full ``config`` is taken verbatim (no deblur defaults —
+    it is already explicit about every knob).
+
+    ``tune=True`` / ``tune="measure"`` delegates the choice to the plan
+    autotuner (:mod:`repro.ops.tune`): explicitly-passed knobs become pins,
+    the frame stack sizes the tuning batch, and the image's own (H, W) grid
+    is offered as an extra candidate factorization.
     """
     from repro.ops import plan as _plan
 
-    if mesh is None:
-        # forward rfft/overlap so plan()'s distributed-knobs-without-a-mesh
-        # guard raises instead of silently ignoring them
-        return _plan(problem.op, rfft=rfft, overlap=overlap, tail=tail,
-                     fused=fused)
+    frames = problem.image.ndim > 2
+    if batch is None and frames:
+        batch = math.prod(problem.image.shape[:-2])
+    if mesh is None and not tune:
+        # the single validation site rejects distributed-only knobs
+        # (rfft/overlap/batch_axis) passed without a mesh
+        return _plan(problem.op, config=config, rfft=rfft, overlap=overlap,
+                     tail=tail, fused=fused, batch_axis=batch_axis)
     h, w = problem.image.shape[-2:]
-    if n1 is None and n2 is None:
-        p = mesh.shape[axis_name]
-        if h % p == 0 and (rfft or w % p == 0):
-            n1, n2 = h, w
-    if (
-        batch_axis is None
-        and problem.image.ndim > 2
-        and "data" in mesh.axis_names
-        and axis_name != "data"
-    ):
-        batch_axis = "data"
+    if tune:
+        pins = {
+            k: v
+            for k, v in dict(
+                n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
+                fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+            ).items()
+            if v is not None
+        }
+        return _plan(
+            problem.op, mesh, config=config, tune=tune, batch=batch,
+            tune_opts={"extra_factorizations": [(h, w)]}, **pins,
+        )
+    if config is None:
+        axis = axis_name if axis_name is not None else "model"
+        if n1 is None and n2 is None:
+            p = mesh.shape[axis]
+            if h % p == 0 and (rfft or w % p == 0):
+                n1, n2 = h, w
+        if (
+            batch_axis is None
+            and frames
+            and "data" in mesh.axis_names
+            and axis != "data"
+        ):
+            batch_axis = "data"
     return _plan(
-        problem.op, mesh, n1=n1, n2=n2, rfft=rfft, overlap=overlap,
-        tail=tail, fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+        problem.op, mesh, config=config, n1=n1, n2=n2, rfft=rfft,
+        overlap=overlap, tail=tail, fused=fused, batch_axis=batch_axis,
+        axis_name=axis_name,
     )
 
 

@@ -29,7 +29,8 @@ Deblurring", arXiv:1707.02244):
                here: ``repro.ops.plan(op, mesh)`` lowers an operator onto
                these steps (and onto planned CPISTA/FISTA matvecs), and the
                ``repro.core.solvers`` drivers run it — make_dist_cpadmm
-               survives only as a deprecation shim over that API.
+               survives only as a deprecation shim over that API (removed
+               in repro 0.2.0; deliberately not re-exported here).
 
 The solvers here must agree with the single-device ``repro.core`` paths —
 tests/test_dist_equiv.py and tests/test_plan.py pin the distributed-vs-core
@@ -37,4 +38,54 @@ match for every method, and tests/dist_progs/*.py exercise every module on
 8 fake devices.
 """
 
-from . import compat, fft, recovery, sharding  # noqa: F401
+_LAZY_MODULES = ("compat", "fft", "recovery", "sharding")
+
+# Package-level symbol re-exports (PEP 562 lazy, like repro.ops).
+# ``make_dist_cpadmm`` is deliberately NOT here and NOT in ``__all__``: the
+# shim is deprecated (removal in repro 0.2.0) and stays reachable only by
+# its full path ``repro.dist.recovery.make_dist_cpadmm`` until then.
+_LAZY_SYMBOLS = {
+    "make_mesh": "compat",
+    "shard_map": "compat",
+    "MODEL_AXIS": "fft",
+    "layout_2d": "fft",
+    "unlayout_2d": "fft",
+    "freq_flat": "fft",
+    "make_distributed_fft": "fft",
+    "make_distributed_rfft": "fft",
+    "make_distributed_matvec": "fft",
+    "DistCpadmmParams": "recovery",
+    "DistCpadmmState": "recovery",
+    "dist_cpadmm_step": "recovery",
+    "dist_cpadmm_step_fused": "recovery",
+    "make_dist_spectrum": "recovery",
+    "rules_for_arch": "sharding",
+    "activate_rules": "sharding",
+    "constrain": "sharding",
+    "grad_reduce_boundary": "sharding",
+}
+
+__all__ = sorted(_LAZY_MODULES) + sorted(_LAZY_SYMBOLS)
+
+
+def __getattr__(name: str):
+    import importlib
+
+    if name in _LAZY_MODULES:
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    if name in _LAZY_SYMBOLS:
+        mod = importlib.import_module(f".{_LAZY_SYMBOLS[name]}", __name__)
+        # bind every symbol that module provides at once: importing the
+        # submodule also sets the package attribute of the module's own
+        # name, which must not shadow later symbol lookups
+        for other, modname in _LAZY_SYMBOLS.items():
+            if modname == _LAZY_SYMBOLS[name]:
+                globals()[other] = getattr(mod, other)
+        return globals()[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(list(globals()) + list(__all__)))

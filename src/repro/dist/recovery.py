@@ -268,6 +268,10 @@ def make_dist_cpadmm(
 ):
     """DEPRECATED shim: jitted solver(spec2d, mask2d, y2d, alpha, rho, sigma).
 
+    .. deprecated:: 0.1.0
+        Will be **removed in repro 0.2.0**.  Not re-exported from
+        ``repro.dist`` — reachable only by this full path until removal.
+
     The bespoke distributed driver this factory used to build is gone — the
     unified path is::
 
@@ -280,8 +284,9 @@ def make_dist_cpadmm(
     output is pinned identical to the plan route (tests/test_plan.py).
     """
     warnings.warn(
-        "make_dist_cpadmm is deprecated: build a repro.ops.plan and call "
-        "repro.core.solvers.solve(..., method='cpadmm', plan=...) instead",
+        "make_dist_cpadmm is deprecated and will be removed in repro 0.2.0: "
+        "build a repro.ops.plan and call repro.core.solvers.solve(..., "
+        "method='cpadmm', plan=...) instead",
         DeprecationWarning,
         stacklevel=2,
     )

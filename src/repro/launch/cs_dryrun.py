@@ -41,9 +41,9 @@ import jax.numpy as jnp
 
 from repro.dist.fft import padded_rfft_len
 from repro.dist.recovery import DistCpadmmState
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, WIRE_MULT
+from repro.launch.roofline import model_block_times
 from repro.ops import plan_from_parts
 
 SDS = jax.ShapeDtypeStruct
@@ -79,35 +79,19 @@ def lower_variant(
 
 
 def analyze(compiled, iters, batch, overlap=1):
-    hlo = compiled.as_text()
-    c = analyze_hlo(hlo)
-    wire = sum(WIRE_MULT.get(op, 1.0) * b for op, b in c.collective_bytes.items())
+    # The roofline terms and the hidden-collective overlap model live in
+    # launch/roofline.model_block_times — shared with the autotuner's
+    # candidate scoring (ops/tune.py) so the dry-run tables and the tuner
+    # can never drift apart.
+    c = analyze_compiled(compiled)
     a2a_bytes = c.collective_bytes.get("all-to-all", 0)
-    compute_s = c.flops / PEAK_FLOPS
-    collective_s = wire / ICI_BW
-    # Overlap model: with the transpose split into K chunks, chunk i's
-    # collective flies while chunk i+1's first-stage FFT+twiddle runs, so at
-    # most (K-1)/K of the wire time can hide — and never more than the
-    # first-stage local-work window itself (~half the per-iteration local
-    # time; the column FFT after the transpose is the other half and cannot
-    # overlap its own transform's collective).  Local FFTs lower to custom
-    # calls whose flops XLA's cost walk cannot see, but at these shapes they
-    # are HBM-bound anyway, so the window is bounded by the larger of the
-    # compute and memory terms.
-    local_s = max(compute_s, c.bytes / HBM_BW)
-    hidden_s = min((overlap - 1) / overlap * collective_s, 0.5 * local_s)
+    times = model_block_times(c, overlap)
     return {
         "flops_per_dev": c.flops,
         "bytes_per_dev": c.bytes,
         "collective_bytes_per_dev": c.collective_bytes,
         "collective_counts": {k: v for k, v in c.collective_counts.items()},
-        "compute_s": compute_s,
-        "memory_s": c.bytes / HBM_BW,
-        "collective_s": collective_s,
-        "overlap": overlap,
-        "hidden_collective_s": hidden_s,
-        "hidden_collective_frac": hidden_s / collective_s if collective_s else 0.0,
-        "effective_collective_s": collective_s - hidden_s,
+        **times,
         "per_iter_a2a": c.collective_counts.get("all-to-all", 0) / iters,
         "flops_per_signal": c.flops / batch,
         "a2a_bytes_per_signal": a2a_bytes / batch,

@@ -517,3 +517,9 @@ class HloAnalyzer:
 
 def analyze_hlo(hlo: str) -> Cost:
     return HloAnalyzer(hlo).analyze()
+
+
+def analyze_compiled(compiled) -> Cost:
+    """Cost of a ``jax`` ``Compiled`` object — the post-GSPMD per-device
+    module text (what abstract-lowered tuner candidates hand over)."""
+    return analyze_hlo(compiled.as_text())

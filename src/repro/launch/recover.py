@@ -102,6 +102,14 @@ def _parser() -> argparse.ArgumentParser:
                     help="half-spectrum distributed transforms (with --mesh)")
     ap.add_argument("--overlap", type=int, default=1,
                     help="chunked-transpose overlap factor K (with --mesh)")
+    ap.add_argument("--tune", nargs="?", const="model", default=None,
+                    choices=("model", "measure"),
+                    help="autotune the plan config (repro.ops.tune): bare "
+                         "--tune ranks candidates by the HLO cost model; "
+                         "--tune measure additionally wall-clocks the top "
+                         "picks.  Explicit --rfft/--overlap/--n1 become "
+                         "pins; the winner is cached in "
+                         "artifacts/plan_cache.json (REPRO_PLAN_CACHE)")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N XLA host devices (must be the first thing "
                          "jax sees; honored when run as a script)")
@@ -129,14 +137,33 @@ def parse_mesh(mesh_arg: str | None):
     raise ValueError(f"--mesh must be 'M' or 'DxM', got {mesh_arg!r}")
 
 
-def build_plan(op, mesh_arg: str | None, n1=None, rfft=False, overlap=1):
-    """Lower ``op`` per the CLI mesh spec: None (local) or 'M' / 'DxM'."""
+def build_plan(op, mesh_arg: str | None, n1=None, rfft=False, overlap=1,
+               config=None, tune=None, batch=None):
+    """Lower ``op`` per the CLI mesh spec: None (local) or 'M' / 'DxM'.
+
+    ``config=`` forwards a full ``repro.ops.PlanConfig``; ``tune=`` asks the
+    autotuner to pick one, with only the *explicitly set* CLI flags becoming
+    pins (a default ``--overlap 1`` must leave the overlap axis open, or
+    ``--tune`` could never try K > 1).
+    """
     from repro.ops import plan
 
     mesh, batch_axis = parse_mesh(mesh_arg)
+    if tune:
+        pins = {}
+        if rfft:
+            pins["rfft"] = True
+        if overlap != 1:
+            pins["overlap"] = overlap
+        if n1 is not None:
+            pins["n1"] = n1
+        if batch_axis is not None:
+            pins["batch_axis"] = batch_axis
+        return plan(op, mesh, config=config, tune=tune, batch=batch, **pins)
+    if config is not None:
+        return plan(op, mesh, config=config)
     if mesh is None:
-        # forward rfft/overlap so plan()'s guard rejects --rfft/--overlap
-        # without --mesh instead of silently ignoring them
+        # the single validation site rejects --rfft/--overlap without --mesh
         return plan(op, rfft=rfft, overlap=overlap)
     return plan(op, mesh, n1=n1, rfft=rfft, overlap=overlap,
                 batch_axis=batch_axis)
@@ -164,8 +191,22 @@ def build_deblur_workload(args):
     prob = RecoveryProblem(op=dp.op, y=dp.y,
                            x_true=frames.reshape(args.batch, -1))
     mesh, batch_axis = parse_mesh(args.mesh)
-    pl = build_deblur_plan(dp, mesh, n1=args.n1, rfft=args.rfft,
-                           overlap=args.overlap, batch_axis=batch_axis)
+    if args.tune:
+        # pin only explicitly-set flags so the tuner keeps its search space
+        pins = {}
+        if args.rfft:
+            pins["rfft"] = True
+        if args.overlap != 1:
+            pins["overlap"] = args.overlap
+        if args.n1 is not None:
+            pins["n1"] = args.n1
+        pl = build_deblur_plan(dp, mesh, tune=args.tune, batch=args.batch,
+                               **pins)
+    else:
+        pl = build_deblur_plan(dp, mesh, n1=args.n1,
+                               rfft=args.rfft or None,
+                               overlap=args.overlap if args.overlap != 1 else None,
+                               batch_axis=batch_axis)
     return prob, pl, dp
 
 
@@ -207,7 +248,10 @@ def main(argv=None):
                                         normalize=True)
         prob = RecoveryProblem(op=op, y=op.matvec(x_true), x_true=x_true)
         pl = build_plan(op, args.mesh, n1=args.n1, rfft=args.rfft,
-                        overlap=args.overlap)
+                        overlap=args.overlap, tune=args.tune,
+                        batch=args.batch)
+    if args.tune:
+        print(f"tuned plan [{args.tune}]: {pl.config.describe()}")
     x_true = prob.x_true
 
     if args.tol > 0:

@@ -41,6 +41,44 @@ WIRE_MULT = {
 from repro.configs.registry import SHAPES  # noqa: E402
 
 
+def model_block_times(cost, overlap: int = 1) -> dict:
+    """Roofline terms + the hidden-collective overlap model for one compiled
+    block, from a :class:`repro.launch.hlo_analysis.Cost`.
+
+    The shared scoring core of ``launch/cs_dryrun.py`` (the dry-run tables)
+    and ``ops/tune.py`` (candidate ranking) — one cost model, two callers.
+
+    Overlap model: with the transpose split into K chunks, chunk i's
+    collective flies while chunk i+1's first-stage FFT+twiddle runs, so at
+    most (K-1)/K of the wire time can hide — and never more than the
+    first-stage local-work window itself (~half the per-iteration local
+    time; the column FFT after the transpose is the other half and cannot
+    overlap its own transform's collective).  Local FFTs lower to custom
+    calls whose flops XLA's cost walk cannot see, but at production shapes
+    they are HBM-bound anyway, so the window is bounded by the larger of
+    the compute and memory terms.
+    """
+    wire = sum(
+        WIRE_MULT.get(op, 1.0) * b for op, b in cost.collective_bytes.items()
+    )
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.bytes / HBM_BW
+    collective_s = wire / ICI_BW
+    local_s = max(compute_s, memory_s)
+    hidden_s = min((overlap - 1) / overlap * collective_s, 0.5 * local_s)
+    effective_s = collective_s - hidden_s
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "overlap": overlap,
+        "hidden_collective_s": hidden_s,
+        "hidden_collective_frac": hidden_s / collective_s if collective_s else 0.0,
+        "effective_collective_s": effective_s,
+        "modeled_total_s": local_s + effective_s,
+    }
+
+
 def model_flops(rec: dict) -> float:
     seq, batch, kind = SHAPES[rec["shape"]]
     n_active = rec["params"]["active"]

@@ -40,11 +40,15 @@ from . import spectral  # noqa: F401  (dependency-free; safe to load eagerly)
 
 _LAZY = {
     "ExecutionPlan": "plan",
+    "PlanConfig": "plan",
     "PlannedOperator": "plan",
     "plan": "plan",
     "plan_from_parts": "plan",
+    "resolve_plan_config": "plan",
     "GramInvertibleOperator": "operator",
     "RecoveryOperator": "operator",
+    "PlanCache": "tune",
+    "tuned_config": "tune",
 }
 
 __all__ = sorted(_LAZY) + ["spectral"]

@@ -32,8 +32,19 @@ Plan attributes = backend knobs
     fused       frequency-domain CPADMM x-update (2 all-to-alls/iter vs 6)
     batch_axis  mesh axis a leading batch of signals is sharded over
 
-All are numerically pinned to their defaults (tests/test_dist_equiv.py,
-tests/test_plan.py).
+All knobs live in one frozen, hashable :class:`PlanConfig` (also carrying
+the four-step ``n1 x n2`` factorization and the mesh ``axis_name``): every
+plan entry point — ``plan``, ``plan_from_parts``,
+``launch.recover.build_plan``, ``core.deblur.build_deblur_plan`` — accepts
+``config=PlanConfig(...)``, with the individual keyword arguments kept as a
+thin compat path that constructs the same ``PlanConfig``
+(:func:`resolve_plan_config` is the single validation site).  The config is
+also the tuner's unit of currency: ``plan(op, mesh, tune=True)`` asks
+:mod:`repro.ops.tune` to pick the config by cost model (see that module),
+and the JSON tune cache stores winning configs verbatim.
+
+All knobs are numerically pinned to their defaults
+(tests/test_dist_equiv.py, tests/test_plan.py).
 """
 
 from __future__ import annotations
@@ -104,6 +115,104 @@ def _factorize(n: int, n1: Optional[int], n2: Optional[int], p: int, rfft: bool)
             f"(or use rfft=True, which pads the kept columns)"
         )
     return n1, n2
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """Every backend knob of an execution plan, in one frozen hashable value.
+
+    The fields are exactly the plan attributes documented in the module
+    docstring plus the four-step factorization (``n1 x n2``) and the mesh
+    axis the within-signal transforms shard over.  ``n1``/``n2`` left as
+    ``None`` means "auto-factorize near sqrt(n)" (``plan``) — they must be
+    concrete for ``plan_from_parts``, which has no operator to read ``n``
+    from.
+
+    A ``PlanConfig`` is hashable and JSON round-trippable (``to_dict`` /
+    ``from_dict``), which is what lets the autotuner (:mod:`repro.ops.tune`)
+    use it both as the candidate-space element and as the cached winner.
+    """
+
+    rfft: bool = False
+    overlap: int = 1
+    tail: str = "jnp"
+    fused: bool = True
+    batch_axis: Any = None
+    n1: Optional[int] = None
+    n2: Optional[int] = None
+    axis_name: str = MODEL_AXIS
+
+    def validate(self, distributed: bool) -> "PlanConfig":
+        """THE validation site for plan knobs (every entry point funnels
+        here via :func:`resolve_plan_config`); returns self for chaining."""
+        if self.tail not in ("jnp", "pallas"):
+            raise ValueError(f"tail must be 'jnp' or 'pallas', got {self.tail!r}")
+        if not isinstance(self.overlap, int) or self.overlap < 1:
+            raise ValueError(f"overlap must be a positive int, got {self.overlap!r}")
+        if not distributed and (
+            self.rfft or self.overlap != 1 or self.batch_axis is not None
+        ):
+            raise ValueError(
+                "rfft/overlap are distributed-backend knobs (the sharded "
+                "four-step transforms), and batch_axis names a mesh axis; "
+                "pass a mesh to use them — a local plan would silently "
+                "ignore them"
+            )
+        if (self.n1 is not None and self.n1 < 1) or (
+            self.n2 is not None and self.n2 < 1
+        ):
+            raise ValueError(f"n1/n2 must be positive, got {self.n1}/{self.n2}")
+        return self
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if isinstance(d["batch_axis"], tuple):
+            d["batch_axis"] = list(d["batch_axis"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanConfig":
+        d = dict(d)
+        if isinstance(d.get("batch_axis"), list):
+            d["batch_axis"] = tuple(d["batch_axis"])
+        return cls(**d)
+
+    def describe(self) -> str:
+        """Compact human-readable tag (bench rows, tuner logs)."""
+        parts = [
+            f"n1xn2={self.n1}x{self.n2}" if self.n1 else "n1xn2=auto",
+            f"rfft={'on' if self.rfft else 'off'}",
+            f"overlap={self.overlap}",
+            f"tail={self.tail}",
+        ]
+        if not self.fused:
+            parts.append("unfused")
+        if self.batch_axis is not None:
+            parts.append(f"batch_axis={self.batch_axis}")
+        return " ".join(parts)
+
+
+def resolve_plan_config(config: Optional[PlanConfig], *, distributed: bool,
+                        **knobs) -> PlanConfig:
+    """``config=`` / legacy-kwargs reconciliation + the single validation.
+
+    ``knobs`` are the legacy keyword arguments with ``None`` meaning "not
+    given": either a full ``config`` is passed (and every legacy knob must
+    stay unset — mixing the two would silently shadow fields), or a
+    ``PlanConfig`` is constructed from whichever knobs were given, defaults
+    filling the rest.
+    """
+    set_knobs = {k: v for k, v in knobs.items() if v is not None}
+    if config is not None:
+        if set_knobs:
+            raise ValueError(
+                f"pass config=PlanConfig(...) or individual plan knobs, not "
+                f"both (got config= plus {sorted(set_knobs)})"
+            )
+        cfg = config
+    else:
+        cfg = PlanConfig(**set_knobs)
+    return cfg.validate(distributed)
 
 
 class PlannedOperator:
@@ -177,6 +286,21 @@ class ExecutionPlan:
     @property
     def is_distributed(self) -> bool:
         return self.mesh is not None
+
+    @property
+    def config(self) -> PlanConfig:
+        """The knobs of this plan as one :class:`PlanConfig` — the value the
+        tuner caches and the parity tests compare across entry points."""
+        return PlanConfig(
+            rfft=self.rfft,
+            overlap=self.overlap,
+            tail=self.tail,
+            fused=self.fused,
+            batch_axis=self.batch_axis,
+            n1=self.n1,
+            n2=self.n2,
+            axis_name=self.axis_name,
+        )
 
     @property
     def operator(self):
@@ -396,18 +520,67 @@ class _Layout2DOperator:
         return self._plan.norm_bound
 
 
+def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
+    """Lower ``op`` under an already-validated ``PlanConfig``."""
+    if mesh is None:
+        return ExecutionPlan(op=op, tail=cfg.tail, fused=cfg.fused)
+    if hasattr(op, "circ"):  # PartialCirculant: mask = indicator of omega
+        circ, omega = op.circ, op.omega
+    elif hasattr(op, "spec") and hasattr(op, "col"):  # full Circulant
+        circ, omega = op, None
+    else:
+        raise TypeError(
+            f"distributed plans need a (partial) circulant operator, got "
+            f"{type(op).__name__}"
+        )
+    n = circ.n
+    p = mesh.shape[cfg.axis_name]
+    n1, n2 = _factorize(n, cfg.n1, cfg.n2, p, cfg.rfft)
+    if omega is None:
+        mask = jnp.ones((n,), circ.col.dtype)
+    else:
+        mask = jnp.zeros((n,), circ.col.dtype).at[omega].set(1.0)
+    # the spectrum is already stored on the operator (half layout): re-lay it
+    # out for the four-step transforms and shard the columns — no transform
+    # runs here, so composed spectra (deblur's spec(C)·spec(B)) never round-
+    # trip through the time domain
+    spec2d = jax.device_put(
+        spectral.spectrum_layout_2d(circ.spec, n1, n2, rfft=cfg.rfft, p=p),
+        jax.sharding.NamedSharding(mesh, P(None, cfg.axis_name)),
+    )
+    return ExecutionPlan(
+        op=op,
+        mesh=mesh,
+        n1=n1,
+        n2=n2,
+        rfft=cfg.rfft,
+        overlap=cfg.overlap,
+        tail=cfg.tail,
+        fused=cfg.fused,
+        batch_axis=cfg.batch_axis,
+        axis_name=cfg.axis_name,
+        spec2d=spec2d,
+        mask2d=layout_2d(mask, n1, n2),
+        norm_bound=op.operator_norm_bound(),
+    )
+
+
 def plan(
     op,
     mesh=None,
     *,
+    config: Optional[PlanConfig] = None,
+    tune=False,
+    batch: Optional[int] = None,
+    tune_opts: Optional[dict] = None,
     n1: Optional[int] = None,
     n2: Optional[int] = None,
-    rfft: bool = False,
-    overlap: int = 1,
-    tail: str = "jnp",
-    fused: bool = True,
+    rfft: Optional[bool] = None,
+    overlap: Optional[int] = None,
+    tail: Optional[str] = None,
+    fused: Optional[bool] = None,
     batch_axis: Any = None,
-    axis_name: str = MODEL_AXIS,
+    axis_name: Optional[str] = None,
 ) -> ExecutionPlan:
     """Lower ``op`` to an execution plan (see module docstring).
 
@@ -419,58 +592,50 @@ def plan(
     the first column and no distributed FFT of it, so a composed operator
     like the Sec. 7 deblur spectrum ``spec(C)·spec(B)`` is built and sharded
     exactly once) plus the row-sharded measurement mask, and lowers matvecs
-    / solver steps to the four-step transforms.  ``n1``/``n2`` pick the
-    layout factorization (auto-chosen near sqrt(n) when omitted).
+    / solver steps to the four-step transforms.
+
+    Knobs come either as ``config=PlanConfig(...)`` or as the individual
+    keyword arguments (a thin compat path producing the same config; mixing
+    the two is an error).  ``n1``/``n2`` pick the layout factorization
+    (auto-chosen near sqrt(n) when omitted).
+
+    ``tune=True`` (cost model) or ``tune="measure"`` (cost model + wall-clock
+    of the top candidates) asks :mod:`repro.ops.tune` to pick the config
+    instead; any individual knob that *is* passed becomes a pin restricting
+    the candidate space (``config=`` cannot be combined with ``tune`` —
+    a full config leaves nothing to tune).  ``batch`` sizes the tuning
+    workload (leading batch of signals); ``tune_opts`` forwards extras to
+    :func:`repro.ops.tune.tuned_config` (e.g. ``cache=``, ``top_k=``).
     """
-    if tail not in ("jnp", "pallas"):
-        raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
-    if mesh is None:
-        if rfft or overlap != 1:
+    if tune:
+        if config is not None:
             raise ValueError(
-                "rfft/overlap are distributed-backend knobs (the sharded "
-                "four-step transforms); pass a mesh to use them — a local "
-                "plan would silently ignore them"
+                "tune= and config= are mutually exclusive: a full PlanConfig "
+                "leaves nothing to tune (pass individual knobs to pin them)"
             )
-        return ExecutionPlan(op=op, tail=tail, fused=fused)
-    if hasattr(op, "circ"):  # PartialCirculant: mask = indicator of omega
-        circ, omega = op.circ, op.omega
-    elif hasattr(op, "spec") and hasattr(op, "col"):  # full Circulant
-        circ, omega = op, None
-    else:
-        raise TypeError(
-            f"distributed plans need a (partial) circulant operator, got "
-            f"{type(op).__name__}"
+        from . import tune as tune_mod
+
+        pins = {
+            k: v
+            for k, v in dict(
+                n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
+                fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+            ).items()
+            if v is not None
+        }
+        mode = tune if isinstance(tune, str) else "model"
+        cfg = tune_mod.tuned_config(
+            op, mesh, mode=mode, batch=batch, pins=pins, **(tune_opts or {})
         )
-    n = circ.n
-    p = mesh.shape[axis_name]
-    n1, n2 = _factorize(n, n1, n2, p, rfft)
-    if omega is None:
-        mask = jnp.ones((n,), circ.col.dtype)
+        cfg = cfg.validate(distributed=mesh is not None)
     else:
-        mask = jnp.zeros((n,), circ.col.dtype).at[omega].set(1.0)
-    # the spectrum is already stored on the operator (half layout): re-lay it
-    # out for the four-step transforms and shard the columns — no transform
-    # runs here, so composed spectra (deblur's spec(C)·spec(B)) never round-
-    # trip through the time domain
-    spec2d = jax.device_put(
-        spectral.spectrum_layout_2d(circ.spec, n1, n2, rfft=rfft, p=p),
-        jax.sharding.NamedSharding(mesh, P(None, axis_name)),
-    )
-    return ExecutionPlan(
-        op=op,
-        mesh=mesh,
-        n1=n1,
-        n2=n2,
-        rfft=rfft,
-        overlap=overlap,
-        tail=tail,
-        fused=fused,
-        batch_axis=batch_axis,
-        axis_name=axis_name,
-        spec2d=spec2d,
-        mask2d=layout_2d(mask, n1, n2),
-        norm_bound=op.operator_norm_bound(),
-    )
+        cfg = resolve_plan_config(
+            config,
+            distributed=mesh is not None,
+            n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
+            fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+        )
+    return _plan_with_config(op, mesh, cfg)
 
 
 def plan_from_parts(
@@ -478,38 +643,50 @@ def plan_from_parts(
     spec2d=None,
     mask2d=None,
     *,
-    n1: int,
-    n2: int,
-    rfft: bool = False,
-    overlap: int = 1,
-    tail: str = "jnp",
-    fused: bool = True,
+    config: Optional[PlanConfig] = None,
+    n1: Optional[int] = None,
+    n2: Optional[int] = None,
+    rfft: Optional[bool] = None,
+    overlap: Optional[int] = None,
+    tail: Optional[str] = None,
+    fused: Optional[bool] = None,
     batch_axis: Any = None,
-    axis_name: str = MODEL_AXIS,
+    axis_name: Optional[str] = None,
 ) -> ExecutionPlan:
     """Distributed plan from pre-sharded parts instead of an operator.
 
     For callers that already live in the sharded representation: the
     deprecation shim ``repro.dist.recovery.make_dist_cpadmm`` (spectrum and
-    mask arrive as arrays) and the abstract lowering in
-    ``launch/cs_dryrun.py`` (no concrete arrays at all — only
-    :meth:`ExecutionPlan.cpadmm_block` is used).  ``spec2d`` is the
+    mask arrive as arrays) and the abstract lowerings in
+    ``launch/cs_dryrun.py`` and ``ops/tune.py`` (no concrete arrays at all —
+    only :meth:`ExecutionPlan.cpadmm_block` is used).  ``spec2d`` is the
     column-sharded spectrum of C with the matching ``rfft`` layout;
-    ``mask2d`` the row-sharded 0/1 measurement indicator.
+    ``mask2d`` the row-sharded 0/1 measurement indicator.  Accepts
+    ``config=PlanConfig(...)`` like :func:`plan`; with no operator to read
+    ``n`` from, the factorization ``n1 x n2`` must be concrete either way.
     """
-    if tail not in ("jnp", "pallas"):
-        raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
+    cfg = resolve_plan_config(
+        config,
+        distributed=True,
+        n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
+        fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+    )
+    if cfg.n1 is None or cfg.n2 is None:
+        raise ValueError(
+            "plan_from_parts has no operator to infer n from: the config "
+            "must carry a concrete n1 x n2 factorization"
+        )
     norm = jnp.max(jnp.abs(spec2d)) if spec2d is not None else None
     return ExecutionPlan(
         mesh=mesh,
-        n1=n1,
-        n2=n2,
-        rfft=rfft,
-        overlap=overlap,
-        tail=tail,
-        fused=fused,
-        batch_axis=batch_axis,
-        axis_name=axis_name,
+        n1=cfg.n1,
+        n2=cfg.n2,
+        rfft=cfg.rfft,
+        overlap=cfg.overlap,
+        tail=cfg.tail,
+        fused=cfg.fused,
+        batch_axis=cfg.batch_axis,
+        axis_name=cfg.axis_name,
         spec2d=spec2d,
         mask2d=mask2d,
         norm_bound=norm,

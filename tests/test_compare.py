@@ -1,0 +1,110 @@
+"""benchmarks/compare.py perf gate: loud failures, not KeyError tracebacks.
+
+ISSUE 6 satellite: a baseline suite missing from the candidate run must
+fail the gate with an explicit MISSING-suites message (the signature of a
+suite dropped from benchmarks/run.py registration), and malformed
+artifacts must die with a SystemExit diagnostic instead of a stack trace.
+
+Runs under ``python -m pytest`` from the repo root (the cwd on sys.path is
+what makes ``import benchmarks.compare`` resolve — benchmarks/ is a plain
+directory, not an installed package).
+"""
+
+import json
+
+import pytest
+
+from benchmarks import compare
+
+
+def _artifact(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps({"smoke": True, "rows": rows}))
+    return str(p)
+
+
+def _row(suite, name, us):
+    return {"suite": suite, "name": name, "us_per_call": us, "derived": ""}
+
+
+BASE_ROWS = [
+    _row("matvec", "matvec_fft", 1000.0),
+    _row("matvec", "matvec_dense", 2000.0),
+    _row("throughput", "throughput_batched", 3000.0),
+    _row("deblur", "deblur_solve", 5000.0),
+]
+
+
+def test_missing_suite_fails_loudly(tmp_path, capsys):
+    base = _artifact(tmp_path, "base.json", BASE_ROWS)
+    # candidate run lost the whole deblur suite
+    fresh = _artifact(tmp_path, "fresh.json", BASE_ROWS[:2])
+    with pytest.raises(SystemExit) as ei:
+        compare.main([fresh, "--baseline", base])
+    assert ei.value.code == 1
+    out = capsys.readouterr().out
+    assert "MISSING suites" in out and "deblur" in out
+    assert "dropped from the runner registration" in out
+
+
+def test_missing_row_within_surviving_suite_fails(tmp_path, capsys):
+    base = _artifact(tmp_path, "base.json", BASE_ROWS)
+    fresh = _artifact(tmp_path, "fresh.json",
+                      [BASE_ROWS[0], BASE_ROWS[2], BASE_ROWS[3]])
+    with pytest.raises(SystemExit):
+        compare.main([fresh, "--baseline", base])
+    out = capsys.readouterr().out
+    assert "MISSING rows" in out and "matvec_dense" in out
+    assert "MISSING suites" not in out  # matvec suite itself survived
+
+
+def test_identical_runs_pass(tmp_path, capsys):
+    base = _artifact(tmp_path, "base.json", BASE_ROWS)
+    fresh = _artifact(tmp_path, "fresh.json", BASE_ROWS)
+    compare.main([fresh, "--baseline", base])
+    assert "perf gate OK" in capsys.readouterr().out
+
+
+def test_new_suite_in_fresh_run_passes(tmp_path, capsys):
+    base = _artifact(tmp_path, "base.json", BASE_ROWS)
+    fresh = _artifact(
+        tmp_path, "fresh.json",
+        BASE_ROWS + [_row("autotune", "autotune_cold_tune", 9000.0)],
+    )
+    compare.main([fresh, "--baseline", base])
+    assert "perf gate OK" in capsys.readouterr().out
+
+
+def test_invalid_json_is_a_diagnostic_not_a_traceback(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(SystemExit, match="not valid JSON"):
+        compare.load_rows(str(bad))
+
+
+def test_missing_rows_key_is_a_diagnostic(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"smoke": True}))
+    with pytest.raises(SystemExit, match="no 'rows' list"):
+        compare.load_rows(str(bad))
+
+
+def test_unreadable_file_is_a_diagnostic(tmp_path):
+    with pytest.raises(SystemExit, match="cannot read"):
+        compare.load_rows(str(tmp_path / "nope.json"))
+
+
+def test_malformed_row_is_a_diagnostic(tmp_path):
+    bad = _artifact(tmp_path, "bad.json", [{"name": "x"}])  # no us_per_call
+    with pytest.raises(SystemExit, match=r"rows\[0\] lacks"):
+        compare.load_rows(bad)
+
+
+def test_regression_beyond_threshold_fails(tmp_path, capsys):
+    base = _artifact(tmp_path, "base.json", BASE_ROWS)
+    slow = [dict(r) for r in BASE_ROWS]
+    slow[3]["us_per_call"] *= 10  # deblur regresses, others hold the median
+    fresh = _artifact(tmp_path, "fresh.json", slow)
+    with pytest.raises(SystemExit):
+        compare.main([fresh, "--baseline", base])
+    assert "REGRESSED" in capsys.readouterr().out

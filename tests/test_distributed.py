@@ -17,6 +17,7 @@ PROGS = [
     "deblur_prog.py",
     "train_prog.py",
     "compression_prog.py",
+    "autotune_prog.py",
 ]
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")

@@ -22,7 +22,7 @@ from repro.data.synthetic import paper_regime, sparse_signal
 from repro.dist.compat import make_mesh
 from repro.dist.fft import layout_2d, unlayout_2d
 from repro.dist.recovery import make_dist_cpadmm
-from repro.ops import ExecutionPlan, RecoveryOperator, plan
+from repro.ops import ExecutionPlan, PlanConfig, RecoveryOperator, plan, plan_from_parts
 
 N1, N2 = 32, 16
 N = N1 * N2
@@ -299,3 +299,131 @@ def test_plan_auto_factorization():
     x_dist, _ = solve(prob, "ista", iters=100, record_every=100, alpha=ALPHA,
                       plan=pl)
     assert _rel(x_dist, x_ref) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# PlanConfig API (ISSUE 6): one config object, four entry points, one
+# validation site
+# ---------------------------------------------------------------------------
+
+
+def test_plan_config_is_frozen_and_hashable():
+    cfg = PlanConfig(rfft=True, overlap=2, n1=N1, n2=N2)
+    assert hash(cfg) == hash(PlanConfig(rfft=True, overlap=2, n1=N1, n2=N2))
+    with pytest.raises(Exception):  # dataclasses.FrozenInstanceError
+        cfg.rfft = False
+    assert "rfft=on" in cfg.describe() and "overlap=2" in cfg.describe()
+
+
+def test_plan_accepts_config_with_legacy_parity():
+    """config=PlanConfig(...) builds the identical plan the legacy kwargs
+    spell, at every entry point that takes knobs."""
+    prob = _problem()
+    mesh = make_mesh((1,), ("model",))
+    cfg = PlanConfig(rfft=True, overlap=2, n1=N1, n2=N2)
+    via_cfg = plan(prob.op, mesh, config=cfg)
+    via_kw = plan(prob.op, mesh, rfft=True, overlap=2, n1=N1, n2=N2)
+    assert via_cfg.config == via_kw.config == cfg
+    x = jax.random.normal(jax.random.PRNGKey(6), (N,))
+    np.testing.assert_array_equal(
+        np.asarray(via_cfg.matvec(x)), np.asarray(via_kw.matvec(x))
+    )
+
+
+def test_plan_from_parts_accepts_config_with_legacy_parity():
+    prob = _problem()
+    mesh = make_mesh((1,), ("model",))
+    donor = plan(prob.op, mesh, n1=N1, n2=N2)
+    mask2d = layout_2d(jnp.zeros((N,)).at[prob.op.omega].set(1.0), N1, N2)
+    cfg = PlanConfig(n1=N1, n2=N2)
+    via_cfg = plan_from_parts(mesh, donor.spec2d, mask2d, config=cfg)
+    via_kw = plan_from_parts(mesh, donor.spec2d, mask2d, n1=N1, n2=N2)
+    assert via_cfg.config == via_kw.config == cfg
+
+
+def test_build_plan_accepts_config_with_legacy_parity():
+    from repro.launch import recover
+
+    prob = _problem()
+    cfg = PlanConfig(rfft=True, n1=N1, n2=N2)
+    via_cfg = recover.build_plan(prob.op, "1", config=cfg)
+    via_kw = recover.build_plan(prob.op, "1", n1=N1, rfft=True)
+    assert via_cfg.config == via_kw.config == cfg
+
+
+def test_build_deblur_plan_accepts_config_with_legacy_parity():
+    from repro.core.deblur import build_deblur_plan, build_deblur_problem
+    from repro.data.synthetic import starfield
+
+    img = starfield(jax.random.PRNGKey(7), 16, 16, density=0.05, n_blobs=2)
+    dp = build_deblur_problem(jax.random.PRNGKey(8), img, blur_order=3,
+                              subsample=0.5, sensing="romberg")
+    mesh = make_mesh((1,), ("model",))
+    cfg = PlanConfig(rfft=True, n1=16, n2=16)
+    via_cfg = build_deblur_plan(dp, mesh, config=cfg)
+    via_kw = build_deblur_plan(dp, mesh, rfft=True, n1=16, n2=16)
+    assert via_cfg.config == via_kw.config == cfg
+
+
+def test_config_plus_legacy_knobs_is_an_error():
+    prob = _problem()
+    mesh = make_mesh((1,), ("model",))
+    cfg = PlanConfig(n1=N1, n2=N2)
+    with pytest.raises(ValueError, match=r"not both.*rfft"):
+        plan(prob.op, mesh, config=cfg, rfft=True)
+    with pytest.raises(ValueError, match="not both"):
+        plan_from_parts(mesh, None, None, config=cfg, overlap=2)
+
+
+def test_local_plan_rejects_distributed_knobs():
+    """The single validation site: rfft/overlap/batch_axis without a mesh
+    used to be silently ignored — now they refuse loudly."""
+    prob = _problem()
+    for bad in (dict(rfft=True), dict(overlap=4), dict(batch_axis="data")):
+        with pytest.raises(ValueError, match="pass a mesh"):
+            plan(prob.op, **bad)
+
+
+def test_plan_from_parts_requires_concrete_factorization():
+    mesh = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="no operator to infer n"):
+        plan_from_parts(mesh, None, None, config=PlanConfig(rfft=True))
+
+
+def test_plan_config_validate_messages():
+    with pytest.raises(ValueError, match="tail must be"):
+        PlanConfig(tail="cuda").validate(distributed=False)
+    with pytest.raises(ValueError, match="overlap"):
+        PlanConfig(overlap=0).validate(distributed=True)
+    with pytest.raises(ValueError, match="positive"):
+        PlanConfig(n1=-4, n2=8).validate(distributed=True)
+
+
+# ---------------------------------------------------------------------------
+# make_dist_cpadmm deprecation endgame
+# ---------------------------------------------------------------------------
+
+
+def test_shim_warning_pins_removal_version():
+    mesh = make_mesh((1,), ("model",))
+    with pytest.warns(
+        DeprecationWarning,
+        match=r"make_dist_cpadmm is deprecated and will be removed in "
+              r"repro 0\.2\.0",
+    ):
+        make_dist_cpadmm(mesh, N1, N2, 1)
+
+
+def test_make_dist_cpadmm_not_exported_from_dist_package():
+    import repro.dist as dist
+
+    assert "make_dist_cpadmm" not in dist.__all__
+    assert "make_dist_cpadmm" not in dir(dist)
+    with pytest.raises(AttributeError, match="make_dist_cpadmm"):
+        dist.make_dist_cpadmm
+    # the lazy symbol table still serves everything that IS public
+    assert dist.MODEL_AXIS == "model"
+    assert dist.make_mesh is make_mesh
+    assert callable(dist.dist_cpadmm_step)
+    assert set(dist.__all__) >= {"layout_2d", "make_distributed_rfft",
+                                 "rules_for_arch", "DistCpadmmParams"}

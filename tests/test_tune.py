@@ -1,0 +1,230 @@
+"""Plan autotuner (repro.ops.tune): ISSUE 6's tentpole contract.
+
+  * Cache round-trip determinism — a warm cache hit returns the
+    bit-identical config with *zero* scoring or measurement (counters).
+  * Cost-model ranking sanity — rfft beats full-complex at n = 4096^2, the
+    case PR 2 measured at 1.98x lower wire bytes.
+  * Pins collapse the candidate space; the single validation site rejects
+    bad inputs the same way at every entry point.
+
+The 8-device tuned-vs-untuned solve equivalence lives in
+tests/dist_progs/autotune_prog.py (slow lane).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import RecoveryProblem, solve
+from repro.core.circulant import PartialCirculant, gaussian_circulant
+from repro.data.synthetic import paper_regime, sparse_signal
+from repro.dist.compat import make_mesh
+from repro.ops import PlanConfig, plan, tune
+
+N1, N2 = 32, 16
+N = N1 * N2
+
+
+@pytest.fixture(autouse=True)
+def _fresh_counters():
+    tune.reset_counters()
+    yield
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return tune.PlanCache(str(tmp_path / "plan_cache.json"))
+
+
+def _problem(batch=()):
+    x = sparse_signal(jax.random.PRNGKey(0), N, paper_regime(N)[1], batch=batch)
+    C = gaussian_circulant(jax.random.PRNGKey(1), N, normalize=True)
+    m = paper_regime(N)[0]
+    omega = jnp.sort(jax.random.permutation(jax.random.PRNGKey(2), N)[:m])
+    op = PartialCirculant(C, omega.astype(jnp.int32))
+    return RecoveryProblem(op=op, y=op.matvec(x), x_true=x)
+
+
+# ---------------------------------------------------------------------------
+# cache: round-trip determinism, warm hits skip everything
+# ---------------------------------------------------------------------------
+
+
+def test_warm_cache_hit_skips_all_scoring_and_is_bit_identical(cache):
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    cfg1 = tune.tuned_config(op, mesh, batch=2, cache=cache)
+    assert tune.COUNTERS["cache_misses"] == 1
+    assert tune.COUNTERS["scored"] > 0
+    tune.reset_counters()
+    cfg2 = tune.tuned_config(op, mesh, batch=2, cache=cache)
+    assert cfg2 == cfg1  # frozen dataclass equality = field-wise identity
+    assert tune.COUNTERS == {
+        "scored": 0, "measured": 0, "cache_hits": 1, "cache_misses": 0,
+    }
+
+
+def test_config_json_round_trip_is_lossless(cache):
+    cfg = PlanConfig(rfft=True, overlap=4, tail="pallas", fused=False,
+                     batch_axis=("pod", "data"), n1=64, n2=128)
+    assert PlanConfig.from_dict(cfg.to_dict()) == cfg
+    # and through the store itself
+    cache.put("k", {"config": cfg.to_dict(), "mode": "model"})
+    assert PlanConfig.from_dict(cache.get("k")["config"]) == cfg
+
+
+def test_model_entry_does_not_satisfy_measure_request(cache):
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    tune.tuned_config(op, mesh, mode="model", batch=2, cache=cache)
+    tune.reset_counters()
+    tune.tuned_config(op, mesh, mode="measure", batch=2, cache=cache)
+    assert tune.COUNTERS["cache_misses"] == 1
+    assert tune.COUNTERS["measured"] > 0
+    # ...but a measure entry satisfies both modes
+    tune.reset_counters()
+    tune.tuned_config(op, mesh, mode="model", batch=2, cache=cache)
+    tune.tuned_config(op, mesh, mode="measure", batch=2, cache=cache)
+    assert tune.COUNTERS["cache_hits"] == 2 and tune.COUNTERS["scored"] == 0
+
+
+def test_pins_are_part_of_the_cache_key(cache):
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    k_free = tune.cache_key(op, mesh, 2, {})
+    k_pin = tune.cache_key(op, mesh, 2, {"rfft": True})
+    assert k_free != k_pin
+    cfg = tune.tuned_config(op, mesh, batch=2, cache=cache,
+                            pins={"rfft": False})
+    assert cfg.rfft is False  # the pin survives into the winner
+
+
+# ---------------------------------------------------------------------------
+# cost-model ranking sanity
+# ---------------------------------------------------------------------------
+
+
+def test_rfft_beats_full_complex_at_4096_squared():
+    """PR 2 measured the half-spectrum path at ~2x lower FFT flops and wire
+    bytes per signal; the model must rank it first at the production size."""
+    mesh = make_mesh((1,), ("model",))
+    cands = [
+        PlanConfig(rfft=False, n1=4096, n2=4096),
+        PlanConfig(rfft=True, n1=4096, n2=4096),
+    ]
+    scored = tune.score_candidates(mesh, cands, batch=1, iters=2)
+    assert scored[0][1].rfft is True
+    assert scored[0][0] < scored[1][0]
+    assert tune.COUNTERS["scored"] == 2
+
+
+def test_overlap_sweep_shares_one_compile():
+    mesh = make_mesh((1,), ("model",))
+    cands = [
+        PlanConfig(rfft=True, overlap=K, n1=N1, n2=N2) for K in (1, 2, 4, 8)
+    ]
+    scored = tune.score_candidates(mesh, cands, batch=1, iters=2)
+    assert len(scored) == 4
+    assert tune.COUNTERS["scored"] == 1  # one compile group, analytic K sweep
+    # on a 1-device axis collectives vanish: ties break toward overlap=1
+    assert scored[0][1].overlap == 1
+
+
+# ---------------------------------------------------------------------------
+# candidate space + pins
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_configs_honor_pins():
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    free = tune.candidate_configs(op, mesh)
+    assert {c.rfft for c in free} == {False, True}
+    assert {c.overlap for c in free} == set(tune.OVERLAPS)
+    pinned = tune.candidate_configs(op, mesh, pins={"rfft": True, "overlap": 2})
+    assert all(c.rfft and c.overlap == 2 for c in pinned)
+    n1_pinned = tune.candidate_configs(op, mesh, pins={"n1": 16})
+    assert all(c.n1 == 16 and c.n2 == N // 16 for c in n1_pinned)
+
+
+def test_candidate_configs_reject_unknown_axis():
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="axis_name"):
+        tune.candidate_configs(op, mesh, pins={"axis_name": "pod"})
+
+
+def test_extra_factorizations_filtered_by_divisibility():
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    cands = tune.candidate_configs(
+        op, mesh, pins={"rfft": True, "overlap": 1},
+        extra_factorizations=[(N1, N2), (7, 11)],  # (7,11) != N: dropped
+    )
+    facs = {(c.n1, c.n2) for c in cands}
+    assert (N1, N2) in facs and (7, 11) not in facs
+
+
+# ---------------------------------------------------------------------------
+# entry-point plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_tune_rejects_full_config():
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        plan(op, mesh, config=PlanConfig(), tune=True)
+
+
+def test_tuned_config_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="model.*measure"):
+        tune.tuned_config(None, None, mode="guess")
+
+
+def test_local_tune_is_the_pins(cache):
+    cfg = tune.tuned_config(_problem().op, None, pins={"tail": "pallas"})
+    assert cfg == PlanConfig(tail="pallas")
+    assert tune.COUNTERS["scored"] == 0  # nothing distributed to score
+
+
+def test_measure_mode_plan_solves_correctly(cache):
+    """End-to-end: a measure-tuned plan drives the same solve the default
+    plan does (1-device fast-lane version of autotune_prog.py)."""
+    prob = _problem(batch=(2,))
+    mesh = make_mesh((1,), ("model",))
+    pl = plan(prob.op, mesh, tune="measure", batch=2,
+              tune_opts={"cache": cache})
+    assert tune.COUNTERS["measured"] > 0
+    x_ref, _ = solve(prob, "cpadmm", iters=150, record_every=150,
+                     alpha=1e-4, rho=0.01, sigma=0.01)
+    x_tuned, _ = solve(prob, "cpadmm", iters=150, record_every=150,
+                       alpha=1e-4, rho=0.01, sigma=0.01, plan=pl)
+    rel = float(jnp.linalg.norm(x_tuned - x_ref)
+                / (jnp.linalg.norm(x_ref) + 1e-30))
+    assert rel <= 1e-5, rel
+    # the cached winner rebuilds the identical plan config
+    pl2 = plan(prob.op, mesh, tune="measure", batch=2,
+               tune_opts={"cache": cache})
+    assert pl2.config == pl.config
+
+
+def test_cache_cli_show_and_clear(cache, capsys):
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    tune.tuned_config(op, mesh, batch=1, cache=cache)
+    tune.main(["--cache", cache.path, "--show"])
+    out = capsys.readouterr().out
+    assert "1 cached plan" in out and "[model]" in out
+    tune.main(["--cache", cache.path, "--clear"])
+    assert cache.entries() == {}
+
+
+def test_group_key_ignores_overlap_only():
+    a = PlanConfig(rfft=True, overlap=1, n1=8, n2=8)
+    b = dataclasses.replace(a, overlap=8)
+    c = dataclasses.replace(a, rfft=False)
+    assert tune._group_key(a) == tune._group_key(b)
+    assert tune._group_key(a) != tune._group_key(c)
