@@ -1,0 +1,89 @@
+"""Continuous-batching dispatcher vs static batching (beyond-paper).
+
+The serving benchmark for ``repro.serve``: one Poisson stream of
+heterogeneous recovery requests (mixed tolerances — the raggedness that
+makes static batches drain to their stragglers) is served twice on the
+wall clock, by
+
+  (a) ``RecoveryServer`` — continuous batching, converged slots recycled
+      to queued requests mid-run, and
+  (b) ``static_batch_serve`` — fixed waves of ``SLOTS``, each run to its
+      last straggler before the next wave is admitted,
+
+over the *identical* seeded workload and the same ``BatchEngine``.  Rows
+report per-signal service time; the derived fields carry the headline
+serving numbers — signals/sec and p50/p99 latency — plus the recycled-slot
+count and the continuous-vs-static throughput ratio (the acceptance number
+ROADMAP quotes).
+
+Rows:
+    serve_continuous / serve_static / serve_speedup
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, pick
+
+N = pick(16384, 512)
+REQS = pick(32, 8)
+SLOTS = pick(8, 4)
+RATE = pick(200.0, 200.0)  # arrivals/s: fast enough that a queue forms
+MAX_ITERS = pick(2000, 800)
+# 3:1 loose-to-tight mix: most requests finish fast, a few run long — the
+# ragged regime where static waves drain to their stragglers
+TOLS = (1e-3, 1e-3, 1e-3, 1e-6)
+RHO = 0.01
+
+
+def main() -> None:
+    from repro.core.circulant import partial_gaussian_circulant
+    from repro.data.synthetic import paper_regime
+    from repro.serve import (
+        RecoveryServer,
+        WallClock,
+        static_batch_serve,
+        summarize,
+        synthetic_workload,
+    )
+
+    m, _ = paper_regime(N)
+    op = partial_gaussian_circulant(jax.random.PRNGKey(0), N, m,
+                                    normalize=True)
+    reqs = synthetic_workload(op, REQS, rate=RATE, seed=0, tols=TOLS,
+                              max_iters=MAX_ITERS, min_iters=50)
+
+    srv = RecoveryServer(slots=SLOTS, round_iters=32, rho=RHO, sigma=RHO,
+                         clock=WallClock())
+    srv.warmup(reqs[0])  # compile round/re-arm programs off the clock
+    srv.clock = WallClock()  # re-zero so latencies start at arrival 0
+    cont = summarize(srv.serve(reqs))
+    recycled = srv.stats()["total"]["recycled"]
+
+    # the static baseline reuses the same server's compiled engines, so the
+    # comparison is pure scheduling discipline (waves vs recycling)
+    stat = summarize(static_batch_serve(reqs, server=srv, clock=WallClock()))
+
+    emit(
+        "serve_continuous",
+        1e6 / cont["signals_per_sec"],
+        f"sig/s={cont['signals_per_sec']:.1f},p50={cont['p50_latency_s']:.3f}s,"
+        f"p99={cont['p99_latency_s']:.3f}s,recycled={recycled}",
+    )
+    emit(
+        "serve_static",
+        1e6 / stat["signals_per_sec"],
+        f"sig/s={stat['signals_per_sec']:.1f},p50={stat['p50_latency_s']:.3f}s,"
+        f"p99={stat['p99_latency_s']:.3f}s",
+    )
+    speedup = cont["signals_per_sec"] / stat["signals_per_sec"]
+    emit(
+        "serve_speedup",
+        1e6 / cont["signals_per_sec"],
+        f"continuous_vs_static={speedup:.2f}x,n={N},reqs={REQS},slots={SLOTS}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ SUITE_NAMES = (
     "overlap",  # beyond-paper: chunked-transpose overlap sweep
     "dist_ista",  # beyond-paper: plan-API distributed CPISTA/FISTA overhead
     "autotune",  # beyond-paper: cost-model plan autotuner vs hand-picked
+    "serve",  # beyond-paper: continuous-batching dispatcher vs static batch
 )
 
 

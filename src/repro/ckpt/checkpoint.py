@@ -72,25 +72,63 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None, keep
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    _prune(ckpt_dir, keep)
+    # retention never removes the step just published, even when its number
+    # is below ``keep`` older checkpoints (e.g. a restart that re-saves an
+    # early step after later ones already exist)
+    _prune(ckpt_dir, keep, protect=int(step))
     return final
 
 
-def _prune(ckpt_dir: str, keep: int) -> None:
-    steps = sorted(
-        d for d in os.listdir(ckpt_dir) if d.startswith("step_") and not d.startswith(".")
-    )
-    for d in steps[:-keep]:
+def _step_dirs(ckpt_dir: str):
+    """``(step, name)`` for every step directory, ordered *numerically*.
+
+    Directory names are parsed, not lexically sorted: a lexical sort puts
+    ``step_9`` after ``step_10`` (and after every zero-padded name), which
+    made ``restore(latest)`` and ``keep=`` pruning pick the wrong
+    checkpoints past step 9 for any unpadded name (older layouts, hand-made
+    dirs, foreign writers).  Non-numeric ``step_*`` names are ignored.
+    """
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith("step_") or d.startswith("."):
+            continue
+        try:
+            s = int(d.split("_", 1)[1])
+        except ValueError:
+            continue
+        out.append((s, d))
+    out.sort()
+    return out
+
+
+def _prune(ckpt_dir: str, keep: int, protect: Optional[int] = None) -> None:
+    if keep <= 0:
+        return
+    steps = _step_dirs(ckpt_dir)
+    for s, d in steps[:-keep]:
+        if protect is not None and s == protect:
+            continue  # never touch the checkpoint currently being published
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def _dir_for_step(ckpt_dir: str, step: int) -> str:
+    """Resolve a step number to its on-disk directory (padded or not)."""
+    padded = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if os.path.isdir(padded):
+        return padded
+    for s, d in _step_dirs(ckpt_dir):
+        if s == step:
+            return os.path.join(ckpt_dir, d)
+    return padded  # keep the canonical name in the FileNotFoundError
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and os.path.exists(os.path.join(ckpt_dir, d, "meta.json"))
+        s
+        for s, d in _step_dirs(ckpt_dir)
+        if os.path.exists(os.path.join(ckpt_dir, d, "meta.json"))
     ]
     return max(steps) if steps else None
 
@@ -107,7 +145,7 @@ def restore(
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    path = _dir_for_step(ckpt_dir, step)
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     with np.load(os.path.join(path, "arrays.npz")) as z:

@@ -32,7 +32,7 @@ class IstaParams(NamedTuple):
 class IstaState(NamedTuple):
     x: Array  # current estimate x(t)
     x_prev: Array  # previous estimate (FISTA momentum; unused by ISTA)
-    t_mom: Array  # FISTA momentum scalar t_k
+    t_mom: Array  # FISTA momentum t_k, batch-shaped (per signal; unused by ISTA)
 
 
 def default_tau(op, safety: float = 0.99) -> Array:
@@ -45,7 +45,11 @@ def ista_init(op, y: Array, x0: Array | None = None) -> IstaState:
     n = op.n
     batch = y.shape[:-1]
     x = jnp.zeros(batch + (n,), y.dtype) if x0 is None else x0
-    return IstaState(x=x, x_prev=x, t_mom=jnp.ones((), y.dtype))
+    # the FISTA momentum is *per signal* (batch-shaped, not a shared
+    # scalar): a frozen or mid-run-recycled slot then carries exactly the
+    # momentum schedule a solo run would, which is what pins batched /
+    # served FISTA results to the run-alone path
+    return IstaState(x=x, x_prev=x, t_mom=jnp.ones(batch, y.dtype))
 
 
 def ista_step(op, y: Array, state: IstaState, p: IstaParams) -> IstaState:
@@ -64,9 +68,16 @@ def ista_step(op, y: Array, state: IstaState, p: IstaParams) -> IstaState:
 
 
 def fista_step(op, y: Array, state: IstaState, p: IstaParams) -> IstaState:
-    """Beyond-paper: Nesterov-accelerated ISTA, same matvec cost."""
+    """Beyond-paper: Nesterov-accelerated ISTA, same matvec cost.
+
+    ``t_mom`` may be batch-shaped (per-signal momentum, see
+    :func:`ista_init`); the coefficient broadcasts over each signal's
+    trailing signal dims.
+    """
     t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * state.t_mom**2))
     beta = (state.t_mom - 1.0) / t_next
+    if beta.ndim:  # batched momentum: align with the leading batch axes
+        beta = beta.reshape(beta.shape + (1,) * (state.x.ndim - beta.ndim))
     v = state.x + beta * (state.x - state.x_prev)  # extrapolation point
     r = y - op.matvec(v)
     delta = p.tau * op.rmatvec(r)

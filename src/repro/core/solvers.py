@@ -224,9 +224,11 @@ def _freeze_converged(new_state, old_state, active: Array, batch: Tuple[int, ...
     """Keep stepping active signals, freeze converged ones.
 
     ``active`` has the batch shape; every state leaf carrying the batch as
-    leading dims is masked per signal.  Leaves without the batch prefix
-    (e.g. the shared FISTA momentum scalar) advance globally — harmless,
-    since frozen signals' arrays no longer consume them.
+    leading dims is masked per signal (including the per-signal FISTA
+    momentum, which is batched so a frozen — or later recycled — slot's
+    momentum schedule matches a solo run).  Leaves without the batch prefix
+    advance globally — harmless, since frozen signals' arrays no longer
+    consume them.
     """
 
     def sel(new_leaf, old_leaf):
@@ -238,12 +240,103 @@ def _freeze_converged(new_state, old_state, active: Array, batch: Tuple[int, ...
     return jax.tree.map(sel, new_state, old_state)
 
 
+class UntilState(NamedTuple):
+    """The tolerance-driven loop's carry, per slot.
+
+    ``age`` counts iterations *since admission* (== iterations used once a
+    slot converges) and ``delta`` is the last relative iterate change.  Both
+    have the batch shape, which is what makes a slot re-armable mid-run:
+    admitting a new signal into a converged slot resets that slot's state
+    leaves, age, and delta (:func:`rearm_slots`) without disturbing its
+    neighbours — the continuous-batching mechanism ``repro.serve`` builds
+    on.  Keeping only a global iteration counter (the pre-serve design)
+    would make a recycled slot inherit its predecessor's sub-``tol`` delta
+    and iteration count, freezing it instantly before ``min_iters`` could
+    apply.
+    """
+
+    state: Any  # solver state (leaves carry the batch prefix)
+    age: Array  # (batch,) int32 — iterations since (re-)admission
+    delta: Array  # (batch,) last relative iterate change (inf before a step)
+
+
+def until_init(stepper: Stepper) -> Tuple[UntilState, Tuple[int, ...]]:
+    """Fresh loop carry for a stepper; returns (carry, batch_shape)."""
+    s0 = stepper.init()
+    x0 = stepper.extract(s0)
+    batch = x0.shape[:-1]
+    return (
+        UntilState(
+            state=s0,
+            age=jnp.zeros(batch, jnp.int32),
+            delta=jnp.full(batch, jnp.inf, x0.dtype),
+        ),
+        batch,
+    )
+
+
+def until_active(u: UntilState, tol, min_iters, max_iters) -> Array:
+    """Per-slot liveness: still inside the budget AND (young OR moving).
+
+    ``tol`` / ``min_iters`` / ``max_iters`` may be scalars or per-slot
+    arrays broadcastable to the batch shape — per-slot budgets are what let
+    a serving batch mix requests with heterogeneous tolerances (and park
+    empty slots with ``max_iters = 0``).
+
+    ``min_iters`` guards against the thresholded iterate being frozen at 0
+    during the first iterations (the relative change would be spuriously 0).
+    """
+    return jnp.logical_and(
+        u.age < max_iters,
+        jnp.logical_or(u.age < min_iters, u.delta > tol),
+    )
+
+
+def until_step(
+    stepper: Stepper,
+    u: UntilState,
+    tol,
+    min_iters,
+    max_iters,
+    batch: Tuple[int, ...],
+) -> UntilState:
+    """One masked iteration: step active slots, freeze the rest, update each
+    active slot's age and relative change.  Frozen slots keep their last
+    delta (the reporting value; a recycled slot gets a fresh inf via
+    :func:`rearm_slots`, never this stale one)."""
+    active = until_active(u, tol, min_iters, max_iters)
+    new = _freeze_converged(stepper.step(u.state), u.state, active, batch)
+    x_old = stepper.extract(u.state)
+    x_new = stepper.extract(new)
+    num = jnp.linalg.norm(x_new - x_old, axis=-1)
+    den = jnp.linalg.norm(x_old, axis=-1) + 1e-12
+    return UntilState(
+        state=new,
+        age=jnp.where(active, u.age + 1, u.age),
+        delta=jnp.where(active, num / den, u.delta),
+    )
+
+
+def rearm_slots(
+    u: UntilState, init: UntilState, admit: Array, batch: Tuple[int, ...]
+) -> UntilState:
+    """Admit new work into slots: where ``admit`` (batch-shaped bool), take
+    the *init* carry — state leaves re-zeroed, age 0, delta inf — so the
+    admitted signal runs exactly as it would alone; everywhere else the
+    carry is untouched.  jit-friendly (pure where-select)."""
+    return UntilState(
+        state=_freeze_converged(init.state, u.state, admit, batch),
+        age=jnp.where(admit, init.age, u.age),
+        delta=jnp.where(admit, init.delta, u.delta),
+    )
+
+
 def solve_until(
     problem: RecoveryProblem,
     method: str = "cpadmm",
-    tol: float = 1e-7,
-    max_iters: int = 5000,
-    min_iters: int = 50,
+    tol=1e-7,
+    max_iters=5000,
+    min_iters=50,
     alpha: float = 1e-4,
     plan=None,
     **kw,
@@ -259,46 +352,29 @@ def solve_until(
     ``iterations_used`` then has the batch shape (scalar when unbatched) and
     matches what each signal would have used in a solo run.
 
-    ``min_iters`` guards against the thresholded iterate being frozen at 0
-    during the first iterations (the relative change would be spuriously 0).
+    ``tol`` / ``min_iters`` / ``max_iters`` may each be per-signal arrays
+    (broadcastable to the batch shape) — heterogeneous convergence budgets
+    in one batch, the contract the serving dispatcher (``repro.serve``)
+    leans on.  The loop body itself is exposed as
+    :func:`until_init` / :func:`until_step` / :func:`rearm_slots` so a host
+    scheduler can run it round-by-round and admit new signals into
+    converged slots mid-run (continuous batching).
 
     ``plan=`` selects the execution backend: a distributed plan gives
     tolerance-stopped *distributed* recovery (the convergence test runs on
     the flat extract, so the per-signal freeze semantics are identical).
     """
     stepper = make_stepper(problem, method, alpha=alpha, plan=plan, **kw)
-    s0 = stepper.init()
-    x0 = stepper.extract(s0)
-    batch = x0.shape[:-1]
+    u0, batch = until_init(stepper)
 
-    def active_mask(t, delta):
-        return jnp.logical_or(t < min_iters, delta > tol)
+    def cond(u):
+        return jnp.any(until_active(u, tol, min_iters, max_iters))
 
-    def cond(carry):
-        _, t, delta, _ = carry
-        return jnp.logical_and(t < max_iters, jnp.any(active_mask(t, delta)))
+    def body(u):
+        return until_step(stepper, u, tol, min_iters, max_iters, batch)
 
-    def body(carry):
-        state, t, delta, used = carry
-        active = active_mask(t, delta)
-        new = _freeze_converged(stepper.step(state), state, active, batch)
-        x_old = stepper.extract(state)
-        x_new = stepper.extract(new)
-        num = jnp.linalg.norm(x_new - x_old, axis=-1)
-        den = jnp.linalg.norm(x_old, axis=-1) + 1e-12
-        # frozen signals keep their last delta (num would be spuriously 0)
-        delta = jnp.where(active, num / den, delta)
-        used = jnp.where(active, t + 1, used)
-        return new, t + 1, delta, used
-
-    carry0 = (
-        s0,
-        jnp.zeros((), jnp.int32),
-        jnp.full(batch, jnp.inf, x0.dtype),
-        jnp.zeros(batch, jnp.int32),
-    )
-    state, _, _, used = jax.lax.while_loop(cond, body, carry0)
-    return stepper.extract(state), used
+    u = jax.lax.while_loop(cond, body, u0)
+    return stepper.extract(u.state), u.age
 
 
 def solve_checkpointed(

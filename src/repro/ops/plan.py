@@ -399,9 +399,11 @@ class ExecutionPlan:
         p = ista_mod.IstaParams(alpha=jnp.asarray(alpha, dt), tau=tau_v)
         step_fn = ista_mod.fista_step if method == "fista" else ista_mod.ista_step
         zeros = jnp.zeros_like(y2d)
+        # per-signal momentum (batch-shaped) — matches ista_init, so frozen /
+        # recycled slots keep a solo run's schedule (core.solvers.rearm_slots)
         return Stepper(
             init=lambda: ista_mod.IstaState(
-                x=zeros, x_prev=zeros, t_mom=jnp.ones((), dt)
+                x=zeros, x_prev=zeros, t_mom=jnp.ones(y_full.shape[:-1], dt)
             ),
             step=lambda s: step_fn(op2d, y2d, s, p),
             extract=lambda s: unlayout_2d(s.x),

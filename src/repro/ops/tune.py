@@ -51,6 +51,7 @@ import dataclasses
 import json
 import math
 import os
+import tempfile
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -90,25 +91,69 @@ def reset_counters() -> None:
 # ---------------------------------------------------------------------------
 
 
+# paths already warned about this process — a corrupt store quarantines and
+# warns once, not on every subsequent lookup
+_WARNED_CORRUPT: set = set()
+
+
 class PlanCache:
     """JSON store of winning configs: ``key -> {config, mode, score, ...}``.
 
-    Writes are atomic (tmp + rename) so concurrent tuners at worst lose a
-    write, never corrupt the store.  The default path is overridable with
-    the ``REPRO_PLAN_CACHE`` environment variable (tests point it at a
-    tmpdir; ops can point it at a shared volume).
+    Writes are atomic (tmp + rename), and :meth:`put` *re-reads the store
+    just before the rename* and folds any concurrently-written entries into
+    the payload — two tuners racing on different keys both land (the loser
+    of a same-key race is overwritten, which is fine: both wrote a winner
+    for the same workload).  An unparseable store is never silently treated
+    as empty: it is quarantined to ``<path>.corrupt`` with a one-time
+    warning, so a corrupted file can't force silent re-tuning forever while
+    looking like a working cache.  The default path is overridable with the
+    ``REPRO_PLAN_CACHE`` environment variable (tests point it at a tmpdir;
+    ops can point it at a shared volume).
     """
+
+    # test seam: called between the tmp write and the pre-replace re-read,
+    # where a concurrent tuner's os.replace can land (tests/test_tune.py
+    # simulates the race deterministically through it)
+    _race_hook = None
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or os.environ.get("REPRO_PLAN_CACHE", DEFAULT_CACHE_PATH)
 
+    def _quarantine(self, reason: str) -> None:
+        import warnings
+
+        corrupt = f"{self.path}.corrupt"
+        try:
+            os.replace(self.path, corrupt)
+        except OSError:
+            corrupt = "<unmovable>"
+        if self.path not in _WARNED_CORRUPT:
+            _WARNED_CORRUPT.add(self.path)
+            warnings.warn(
+                f"plan cache {self.path} is unreadable ({reason}); "
+                f"quarantined to {corrupt} and starting a fresh store — "
+                f"delete the .corrupt file once inspected",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+
     def _load(self) -> Dict[str, dict]:
         try:
             with open(self.path) as f:
-                data = json.load(f)
-        except (OSError, ValueError):
+                raw = f.read()
+        except OSError:  # missing store: legitimately empty
             return {}
-        return data if isinstance(data, dict) else {}
+        if not raw.strip():
+            return {}
+        try:
+            data = json.loads(raw)
+        except ValueError as e:
+            self._quarantine(f"invalid JSON: {e}")
+            return {}
+        if not isinstance(data, dict):
+            self._quarantine(f"top-level JSON is {type(data).__name__}, not dict")
+            return {}
+        return data
 
     def get(self, key: str) -> Optional[dict]:
         return self._load().get(key)
@@ -119,9 +164,23 @@ class PlanCache:
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        tmp = f"{self.path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
+        # unique per *call*, not just per process: two racing puts in one
+        # process (threads, or the reentrant test seam) must not share a tmp
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(self.path) + ".tmp.", dir=d or "."
+        )
+        with os.fdopen(fd, "w") as f:
             json.dump(data, f, indent=1, sort_keys=True)
+        if self._race_hook is not None:
+            self._race_hook()
+        # close the read-modify-write window: another tuner may have replaced
+        # the store since our load above — re-read and merge (our key wins
+        # its own slot) so concurrent winners are never silently dropped
+        latest = self._load()
+        if any(k not in data for k in latest):
+            latest.update(data)
+            with open(tmp, "w") as f:
+                json.dump(latest, f, indent=1, sort_keys=True)
         os.replace(tmp, self.path)
 
     def clear(self) -> None:

@@ -1,0 +1,228 @@
+"""The continuous-batching engine: one bucket's slots, recycled mid-run.
+
+A :class:`BatchEngine` owns ``slots`` lanes of one batched solver — every
+lane shares the bucket's operator, method, and execution plan, but carries
+its *own* convergence contract (per-slot ``tol`` / ``min_iters`` /
+``max_iters`` arrays, the contract :func:`repro.core.solvers.solve_until`
+grew for exactly this).  The engine advances all lanes together in jitted
+*rounds* of ``round_iters`` masked iterations, then hands control back to
+the host scheduler, which
+
+  1. **harvests** lanes that went inactive (converged, budget-exhausted, or
+     deadline-expired) — their iterate rows become results, and
+  2. **recycles** the freed lanes: a queued request is admitted *mid-run*
+     with the slot's solver state, ``delta``, and iteration age re-armed
+     (:func:`repro.core.solvers.rearm_slots`), so the batch never drains to
+     its stragglers — the LLM-continuous-batching mechanism applied to
+     compressed-signal recovery.
+
+Because freezing and re-arming are pure per-slot where-selects, a recycled
+lane computes exactly what a solo :func:`solve_until` run would (pinned to
+1e-5 in tests/test_serve.py).  One XLA program is compiled per engine; y
+and every per-slot array are traced arguments, so admission never re-jits.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvers import (
+    RecoveryProblem,
+    make_stepper,
+    rearm_slots,
+    until_active,
+    until_init,
+    until_step,
+)
+
+from .request import RecoveryRequest, RecoveryResult
+
+
+class BatchEngine:
+    """``slots`` lanes of one batched solver, recycled round by round."""
+
+    def __init__(
+        self,
+        op: Any,
+        plan: Any,
+        method: str = "cpadmm",
+        slots: int = 8,
+        round_iters: int = 32,
+        alpha: float = 1e-4,
+        rho: float = 0.1,
+        sigma: float = 0.1,
+        bucket: str = "",
+    ):
+        self.op = op
+        self.plan = plan
+        self.method = method
+        self.slots = int(slots)
+        self.round_iters = int(round_iters)
+        self.alpha, self.rho, self.sigma = alpha, rho, sigma
+        self.bucket = bucket
+
+        distributed = plan is not None and getattr(plan, "is_distributed", False)
+        # the drivers' measurement convention: length-m rows locally,
+        # scattered full-length rows (P^T y) on a mesh — requests arrive as
+        # length-m and are scattered at admission when needed
+        self._y_len = op.n if distributed else op.m
+        self._scatter = distributed
+        dtype = jnp.asarray(getattr(getattr(op, "circ", op), "col")).dtype
+        self._y = jnp.zeros((self.slots, self._y_len), dtype)
+
+        # per-slot convergence contracts; empty slots are parked with
+        # max_iters = 0, which until_active treats as never-active
+        self._tol = jnp.full((self.slots,), jnp.inf, dtype)
+        self._min = jnp.zeros((self.slots,), jnp.int32)
+        self._max = jnp.zeros((self.slots,), jnp.int32)
+
+        # host-side slot metadata
+        self._requests: List[Optional[RecoveryRequest]] = [None] * self.slots
+        self._admitted_at: List[Optional[float]] = [None] * self.slots
+        self._slot_used = [False] * self.slots
+
+        self.stats: Dict[str, int] = {
+            "admitted": 0,  # requests that reached a slot
+            "recycled": 0,  # admissions into a lane freed mid-run
+            "rounds": 0,  # jitted round launches
+            "slot_iters": 0,  # sum of per-slot iterations actually stepped
+        }
+
+        def build_stepper(y):
+            return make_stepper(
+                RecoveryProblem(op=op, y=y), method,
+                alpha=alpha, rho=rho, sigma=sigma, plan=plan,
+            )
+
+        # the init carry: solver-state zeros + age 0 + delta inf — both the
+        # engine's starting point and the value re-armed into recycled slots
+        # (solver inits are y-independent, so one init serves every request)
+        stepper0 = build_stepper(self._y)
+        self._u, self._batch = until_init(stepper0)
+        self._u_init = self._u
+        self._x = stepper0.extract(self._u.state)  # (slots, n) last extract
+
+        round_iters_ = self.round_iters
+        batch = self._batch
+
+        @jax.jit
+        def round_fn(y, u, tol, mn, mx):
+            # the stepper is rebuilt under the trace so y is a traced
+            # argument: admitting a new measurement row never re-compiles
+            stepper = build_stepper(y)
+
+            def cond(c):
+                u, k = c
+                return jnp.logical_and(
+                    k < round_iters_, jnp.any(until_active(u, tol, mn, mx))
+                )
+
+            def body(c):
+                u, k = c
+                return until_step(stepper, u, tol, mn, mx, batch), k + 1
+
+            (u, _) = jax.lax.while_loop(cond, body, (u, jnp.int32(0)))
+            return u, stepper.extract(u.state)
+
+        @jax.jit
+        def rearm_fn(u, admit):
+            return rearm_slots(u, self._u_init, admit, batch)
+
+        self._round_fn = round_fn
+        self._rearm_fn = rearm_fn
+
+    # -- occupancy ---------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return any(r is not None for r in self._requests)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._requests) if r is None]
+
+    # -- admission ---------------------------------------------------------
+    def admit(self, slot: int, req: RecoveryRequest, now: float) -> None:
+        """Place ``req`` into a free slot, re-arming that lane's state."""
+        if self._requests[slot] is not None:
+            raise RuntimeError(f"slot {slot} is occupied")
+        y = jnp.asarray(req.y, self._y.dtype)
+        if self._scatter and y.shape[-1] != self._y_len:
+            y = self.op.project_back(y)
+        if y.shape[-1] != self._y_len:
+            raise ValueError(
+                f"request {req.request_id!r}: measurement length "
+                f"{y.shape[-1]} does not fit this bucket's operator "
+                f"(expects {self._y_len})"
+            )
+        self._y = self._y.at[slot].set(y)
+        self._tol = self._tol.at[slot].set(req.tol)
+        self._min = self._min.at[slot].set(req.min_iters)
+        self._max = self._max.at[slot].set(req.max_iters)
+        admit_mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
+        self._u = self._rearm_fn(self._u, admit_mask)
+        self._requests[slot] = req
+        self._admitted_at[slot] = now
+        self.stats["admitted"] += 1
+        if self._slot_used[slot]:
+            self.stats["recycled"] += 1
+        self._slot_used[slot] = True
+
+    def park(self, slot: int) -> None:
+        """Return a harvested lane to the never-active parked state."""
+        self._requests[slot] = None
+        self._admitted_at[slot] = None
+        self._max = self._max.at[slot].set(0)
+        self._tol = self._tol.at[slot].set(jnp.inf)
+
+    # -- the round ---------------------------------------------------------
+    def run_round(self) -> None:
+        """Advance every active lane up to ``round_iters`` masked iterations."""
+        if not self.busy:
+            return
+        age_before = int(jnp.sum(self._u.age))
+        self._u, self._x = self._round_fn(
+            self._y, self._u, self._tol, self._min, self._max
+        )
+        jax.block_until_ready(self._x)
+        self.stats["rounds"] += 1
+        self.stats["slot_iters"] += int(jnp.sum(self._u.age)) - age_before
+
+    # -- harvest -----------------------------------------------------------
+    def harvest(self, now: float) -> List[RecoveryResult]:
+        """Collect finished lanes: converged / budget-exhausted lanes, plus
+        any whose deadline has passed (flagged partial results)."""
+        if not self.busy:
+            return []
+        age = jax.device_get(self._u.age)
+        delta = jax.device_get(self._u.delta)
+        tol = jax.device_get(self._tol)
+        mn = jax.device_get(self._min)
+        mx = jax.device_get(self._max)
+        out: List[RecoveryResult] = []
+        x_host = None
+        for i, req in enumerate(self._requests):
+            if req is None:
+                continue
+            inactive = age[i] >= mx[i] or (age[i] >= mn[i] and delta[i] <= tol[i])
+            expired = req.deadline is not None and now >= req.deadline
+            if not (inactive or expired):
+                continue
+            if x_host is None:
+                x_host = jax.device_get(self._x)
+            converged = bool(delta[i] <= tol[i] and age[i] >= mn[i])
+            out.append(RecoveryResult(
+                request_id=req.request_id,
+                x=x_host[i],
+                iterations=int(age[i]),
+                delta=float(delta[i]),
+                converged=converged,
+                deadline_expired=bool(expired and not converged),
+                arrival_time=req.arrival_time,
+                admitted_time=self._admitted_at[i],
+                finish_time=now,
+                bucket=self.bucket,
+            ))
+            self.park(i)
+        return out

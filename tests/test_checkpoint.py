@@ -66,3 +66,64 @@ def test_restore_specific_step(tmp_path):
     step, restored = ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: t1))
     assert step == 1
     np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t1["a"]))
+
+
+# ---------------------------------------------------------------------------
+# step enumeration: numeric, never lexical (step_9 vs step_10 vs step_100)
+# ---------------------------------------------------------------------------
+
+
+def _unpad(ckpt_dir, step):
+    """Rewrite a saved checkpoint dir to the unpadded legacy name, e.g.
+    step_0000000009 -> step_9 (older layouts / foreign writers)."""
+    src = os.path.join(ckpt_dir, f"step_{step:010d}")
+    dst = os.path.join(ckpt_dir, f"step_{step}")
+    os.rename(src, dst)
+    return dst
+
+
+def test_unpadded_step_names_order_numerically(tmp_path):
+    """Regression: a lexical sort makes step_9 > step_10 > step_100, so
+    restore(latest) picked step_9 and pruning deleted the newest dirs."""
+    tree = _tree()
+    for s in (9, 10, 100):
+        ckpt.save(str(tmp_path), s, tree, keep=100)
+        _unpad(str(tmp_path), s)
+    assert ckpt.latest_step(str(tmp_path)) == 100
+    step, _ = ckpt.restore(str(tmp_path), None, jax.eval_shape(lambda: tree))
+    assert step == 100
+    # restore by explicit number resolves the unpadded dir too
+    step, _ = ckpt.restore(str(tmp_path), 9, jax.eval_shape(lambda: tree))
+    assert step == 9
+
+
+def test_prune_keeps_numerically_newest_across_paddings(tmp_path):
+    """Mixed padded/unpadded dirs: lexically 'step_9' sorts after
+    'step_0000000010', so the old prune deleted the *newer* step 10."""
+    tree = _tree()
+    ckpt.save(str(tmp_path), 9, tree, keep=100)
+    _unpad(str(tmp_path), 9)
+    ckpt.save(str(tmp_path), 10, tree, keep=1)
+    names = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert names == ["step_0000000010"], names
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
+def test_prune_never_touches_step_being_published(tmp_path):
+    """Saving a numerically-older step after newer ones exist (restart from
+    an early checkpoint) must not prune the step it just wrote."""
+    tree = _tree()
+    ckpt.save(str(tmp_path), 100, tree, keep=1)
+    path5 = ckpt.save(str(tmp_path), 5, tree, keep=1)
+    assert os.path.isdir(path5), "just-published step_5 was pruned"
+    step, _ = ckpt.restore(str(tmp_path), 5, jax.eval_shape(lambda: tree))
+    assert step == 5
+
+
+def test_non_numeric_step_dirs_are_ignored(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 3, tree)
+    os.makedirs(os.path.join(tmp_path, "step_backup"))
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    ckpt.save(str(tmp_path), 4, tree, keep=1)  # prune must not crash on it
+    assert ckpt.latest_step(str(tmp_path)) == 4

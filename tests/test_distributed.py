@@ -18,6 +18,7 @@ PROGS = [
     "train_prog.py",
     "compression_prog.py",
     "autotune_prog.py",
+    "serve_prog.py",
 ]
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")

@@ -1,0 +1,226 @@
+"""Recovery-as-a-service dispatcher: scheduling, recycling, isolation.
+
+The serving layer's contracts, each pinned deterministically via
+``ManualClock`` and seeded workloads:
+
+  * seeded arrivals are bit-for-bit reproducible,
+  * a recycled slot computes exactly what a solo ``solve_until`` run
+    would (<= 1e-5 relative — the ISSUE acceptance pin),
+  * priority orders admission under contention,
+  * deadline expiry returns a *flagged partial result*, never raises,
+  * requests whose operator or plan config differ never share a batch.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import RecoveryProblem, partial_gaussian_circulant, solve_until
+from repro.data.synthetic import paper_regime, sparse_signal
+from repro.ops import PlanConfig
+from repro.serve import (
+    ManualClock,
+    RecoveryRequest,
+    RecoveryServer,
+    operator_fingerprint,
+    poisson_times,
+    static_batch_serve,
+    summarize,
+    synthetic_workload,
+)
+
+N = 128
+RHO = 0.01  # production launcher setting; converges well inside max_iters
+
+
+def _op(seed=1, n=N):
+    m, _ = paper_regime(n)
+    return partial_gaussian_circulant(jax.random.PRNGKey(seed), n, m,
+                                      normalize=True)
+
+
+def _server(**kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("round_iters", 16)
+    kw.setdefault("rho", RHO)
+    kw.setdefault("sigma", RHO)
+    kw.setdefault("clock", ManualClock())
+    return RecoveryServer(**kw)
+
+
+def _workload(op, n_requests, **kw):
+    kw.setdefault("rate", 1000.0)
+    kw.setdefault("tols", (1e-3, 1e-5))
+    kw.setdefault("max_iters", 600)
+    return synthetic_workload(op, n_requests, seed=7, **kw)
+
+
+# -- determinism -----------------------------------------------------------
+def test_poisson_arrivals_deterministic():
+    a = poisson_times(3, 20, 50.0)
+    b = poisson_times(3, 20, 50.0)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) > 0) and a[0] > 0
+    with pytest.raises(ValueError):
+        poisson_times(0, 4, 0.0)
+
+
+def test_synthetic_workload_reproducible():
+    op = _op()
+    w1 = _workload(op, 5)
+    w2 = _workload(op, 5)
+    for r1, r2 in zip(w1, w2):
+        assert r1.request_id == r2.request_id
+        assert r1.tol == r2.tol and r1.arrival_time == r2.arrival_time
+        np.testing.assert_array_equal(np.asarray(r1.y), np.asarray(r2.y))
+
+
+# -- the acceptance pin: recycled slots match run-alone --------------------
+def test_recycled_slot_matches_solo_solve():
+    """6 requests through 2 slots forces recycling; every result —
+    including recycled-lane ones — must match its solo solve_until run to
+    1e-5 relative, with identical iteration counts."""
+    op = _op()
+    reqs = _workload(op, 6)
+    srv = _server()
+    results = srv.serve(reqs)
+    assert len(results) == 6
+    assert srv.stats()["total"]["recycled"] >= 4  # 6 reqs - 2 cold slots
+    by_id = {r.request_id: r for r in reqs}
+    for res in results:
+        req = by_id[res.request_id]
+        x_solo, used = solve_until(
+            RecoveryProblem(op=op, y=req.y), "cpadmm", tol=req.tol,
+            max_iters=req.max_iters, min_iters=req.min_iters,
+            rho=RHO, sigma=RHO,
+        )
+        x_solo = np.asarray(x_solo)
+        rel = np.linalg.norm(res.x - x_solo) / (np.linalg.norm(x_solo) + 1e-12)
+        assert rel <= 1e-5, (res.request_id, rel)
+        assert res.iterations == int(used), res.request_id
+        assert res.converged
+
+
+def test_static_baseline_serves_same_results():
+    op = _op()
+    reqs = _workload(op, 5)
+    cont = _server().serve(reqs)
+    stat = static_batch_serve(reqs, slots=2, round_iters=16, rho=RHO,
+                              sigma=RHO, clock=ManualClock())
+    assert sorted(r.request_id for r in stat) == \
+        sorted(r.request_id for r in cont)
+    cont_by_id = {r.request_id: r for r in cont}
+    for r in stat:
+        assert r.iterations == cont_by_id[r.request_id].iterations
+        np.testing.assert_allclose(r.x, cont_by_id[r.request_id].x,
+                                   rtol=1e-5, atol=1e-7)
+
+
+# -- scheduling ------------------------------------------------------------
+def test_priority_orders_admission_under_contention():
+    """One slot, three same-arrival requests with distinct priorities:
+    admission (and hence finish) order must be by descending priority."""
+    op = _op()
+    _, k = paper_regime(N)
+    srv = _server(slots=1)
+    for pri, rid in ((0, "low"), (2, "high"), (1, "mid")):
+        x = sparse_signal(jax.random.PRNGKey(10 + pri), N, k)
+        srv.submit(RecoveryRequest(
+            request_id=rid, op=op, y=op.matvec(x), tol=1e-3,
+            max_iters=200, priority=pri,
+        ))
+    results = srv.drain()
+    # one slot: finish order IS admission order
+    assert [r.request_id for r in results] == ["high", "mid", "low"]
+
+
+def test_deadline_expiry_returns_flagged_partial():
+    """A deadline that lapses mid-solve yields a flagged partial result —
+    iterations short of the budget, never an exception; a deadline that
+    lapses while queued yields a zero-iterate flagged result."""
+    op = _op()
+    _, k = paper_regime(N)
+
+    def req(rid, deadline):
+        x = sparse_signal(jax.random.PRNGKey(99), N, k)
+        return RecoveryRequest(request_id=rid, op=op, y=op.matvec(x),
+                               tol=1e-12, min_iters=50, max_iters=5000,
+                               deadline=deadline)
+
+    clock = ManualClock()
+    srv = _server(slots=1, clock=clock)
+    srv.submit(req("in-slot", deadline=0.5))
+    srv.step()  # admitted, one round done, deadline still ahead
+    clock.advance_to(1.0)
+    results = srv.step()
+    assert [r.request_id for r in results] == ["in-slot"]
+    r = results[0]
+    assert r.deadline_expired and not r.converged
+    assert 0 < r.iterations < 5000
+    assert np.any(np.asarray(r.x) != 0)  # partial iterate, not a zero stub
+
+    srv2 = _server(slots=1, clock=ManualClock(t=3.0))
+    srv2.submit(req("queued-expired", deadline=1.0))  # already past
+    results2 = srv2.drain()
+    r2 = results2[0]
+    assert r2.deadline_expired and r2.iterations == 0
+    assert r2.admitted_time is None
+    assert not np.any(np.asarray(r2.x))
+
+
+# -- bucket isolation ------------------------------------------------------
+def test_distinct_operators_never_share_a_batch():
+    """Same shapes, different spectra: content fingerprints differ, so the
+    requests land in separate engines and each recovers against its own
+    operator (solo-parity checked per result)."""
+    op_a, op_b = _op(seed=1), _op(seed=2)
+    assert operator_fingerprint(op_a) != operator_fingerprint(op_b)
+    reqs = []
+    for tag, op in (("a", op_a), ("b", op_b)):
+        for r in _workload(op, 2):
+            reqs.append(dataclasses.replace(
+                r, request_id=f"{tag}-{r.request_id}"))
+    srv = _server()
+    results = srv.serve(reqs)
+    assert srv.stats()["buckets"] == 2
+    by_id = {r.request_id: r for r in reqs}
+    for res in results:
+        req = by_id[res.request_id]
+        x_solo, _ = solve_until(
+            RecoveryProblem(op=req.op, y=req.y), "cpadmm", tol=req.tol,
+            max_iters=req.max_iters, min_iters=req.min_iters,
+            rho=RHO, sigma=RHO,
+        )
+        x_solo = np.asarray(x_solo)
+        rel = np.linalg.norm(res.x - x_solo) / (np.linalg.norm(x_solo) + 1e-12)
+        assert rel <= 1e-5, (res.request_id, rel)
+
+
+def test_plan_config_splits_buckets():
+    """rfft vs full-complex plan configs must never share a batch: the
+    bucket key embeds PlanConfig.describe(), so the keys differ even for
+    the same operator and solver."""
+    op = _op()
+    base = _workload(op, 1)[0]
+    r_full = dataclasses.replace(base, plan_config=PlanConfig())
+    r_rfft = dataclasses.replace(
+        base, plan_config=PlanConfig(rfft=True, n1=8, n2=16))
+    srv = _server()
+    assert srv.bucket_key(r_full) != srv.bucket_key(r_rfft)
+    # methods split buckets too
+    r_ista = dataclasses.replace(base, method="ista")
+    assert srv.bucket_key(base) != srv.bucket_key(r_ista)
+
+
+# -- metrics ---------------------------------------------------------------
+def test_summarize_reports_throughput_and_percentiles():
+    op = _op()
+    reqs = _workload(op, 4)
+    srv = _server()
+    s = summarize(srv.serve(reqs))
+    assert s["count"] == 4 and s["converged"] == 4 and s["expired"] == 0
+    assert s["signals_per_sec"] > 0
+    assert 0 <= s["p50_latency_s"] <= s["p99_latency_s"]
+    assert summarize([]) == {"count": 0}

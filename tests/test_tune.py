@@ -12,6 +12,7 @@ tests/dist_progs/autotune_prog.py (slow lane).
 """
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -228,3 +229,70 @@ def test_group_key_ignores_overlap_only():
     c = dataclasses.replace(a, rfft=False)
     assert tune._group_key(a) == tune._group_key(b)
     assert tune._group_key(a) != tune._group_key(c)
+
+
+# ---------------------------------------------------------------------------
+# cache durability: concurrent writers merge, corrupt stores quarantine
+# ---------------------------------------------------------------------------
+
+
+def _entry(tag):
+    return {"config": PlanConfig(n1=8, n2=8).to_dict(), "mode": "model",
+            "modeled_total_s": 1.0, "tag": tag}
+
+
+def test_concurrent_puts_merge_instead_of_dropping(tmp_path):
+    """Two tuners racing on different keys must both land: writer A's
+    read-modify-write window is interleaved (via the _race_hook test seam)
+    with writer B's complete put — the pre-replace re-read folds B's entry
+    into A's payload instead of silently clobbering it."""
+    path = str(tmp_path / "plan_cache.json")
+    a, b = tune.PlanCache(path), tune.PlanCache(path)
+    a._race_hook = lambda: tune.PlanCache.put(b, "key_b", _entry("b"))
+    a.put("key_a", _entry("a"))
+    entries = tune.PlanCache(path).entries()
+    assert set(entries) == {"key_a", "key_b"}
+    assert entries["key_a"]["tag"] == "a" and entries["key_b"]["tag"] == "b"
+
+
+def test_concurrent_same_key_put_is_last_writer_wins(tmp_path):
+    path = str(tmp_path / "plan_cache.json")
+    a, b = tune.PlanCache(path), tune.PlanCache(path)
+    a._race_hook = lambda: tune.PlanCache.put(b, "key", _entry("b"))
+    a.put("key", _entry("a"))  # a's replace lands after b's
+    assert tune.PlanCache(path).entries()["key"]["tag"] == "a"
+
+
+def test_corrupt_cache_quarantined_with_one_time_warning(tmp_path):
+    """An unparseable store must not be silently treated as empty (which
+    re-tuned forever): it is moved aside to .corrupt with one warning, and
+    the tuner proceeds on a fresh store."""
+    path = str(tmp_path / "plan_cache.json")
+    with open(path, "w") as f:
+        f.write("{ not json !!")
+    cache = tune.PlanCache(path)
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        assert cache.entries() == {}
+    assert os.path.exists(path + ".corrupt")
+    assert not os.path.exists(path)
+    # warned once per path per process: a second unreadable store at the
+    # same path quarantines again but stays quiet
+    with open(path, "w") as f:
+        f.write("[1, 2, 3]")  # parseable but not a dict: also corrupt
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert cache.get("anything") is None
+    # the store works again after quarantine
+    cache.put("k", _entry("fresh"))
+    assert cache.get("k")["tag"] == "fresh"
+
+
+def test_missing_cache_file_is_silently_empty(tmp_path):
+    import warnings as _w
+
+    cache = tune.PlanCache(str(tmp_path / "nope.json"))
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert cache.entries() == {}
