@@ -76,6 +76,12 @@ def main() -> None:
     mv_half = make_distributed_matvec(mesh, rfft=True)
     t_half = time_fn(mv_half, spec_half, x2d)
 
+    # wire-compressed collectives (PR 8): same rfft path, bf16 payload on
+    # both transposes — on one device the wire is free, so this row times
+    # the pack/unpack overhead; the byte cut shows in the dryrun model
+    mv_bf16 = make_distributed_matvec(mesh, rfft=True, wire_dtype="bf16")
+    t_bf16 = time_fn(mv_bf16, spec_half, x2d)
+
     emit(
         f"matvec_dist_full_n{n}",
         t_full,
@@ -86,6 +92,12 @@ def main() -> None:
         t_half,
         f"spectrum_cols={n2 // 2 + 1};wire_cols={n2 // 2 + 1};"
         f"vs_full={t_full / t_half:.2f}x",
+    )
+    emit(
+        f"matvec_dist_rfft_bf16wire_n{n}",
+        t_bf16,
+        f"wire_bytes_per_elem=4;fp32_wire_bytes_per_elem=8;"
+        f"pack_overhead_vs_fp32wire={t_bf16 / t_half:.2f}x",
     )
 
 

@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.wire_pack.ops import wire_itemsize
+
 # bandwidths shared with the dry-run's roofline so the two models can
 # never diverge
 from repro.launch.roofline import HBM_BW, ICI_BW
@@ -31,12 +33,15 @@ PROD_N1 = PROD_N2 = 4096
 PROD_P = 16
 
 
-def _hidden_fraction_model(k: int) -> float:
+def _hidden_fraction_model(k: int, wire_dtype: str = "fp32") -> float:
     """Hidden-collective fraction of one forward rfft transform at the
     production shape: (k-1)/k of the wire hides, capped by the stage-1
-    local window (HBM-bound row-rfft of the device's block)."""
+    local window (HBM-bound row-rfft of the device's block).  The payload
+    itemsize comes from the configured wire dtype (2 real planes per
+    complex element), not a hardcoded complex64."""
     nf_pad = -(-(PROD_N2 // 2 + 1) // PROD_P) * PROD_P
-    a2a_bytes = (PROD_N1 // PROD_P) * nf_pad * 8  # complex64 half spectrum
+    elem_bytes = 2 * wire_itemsize(wire_dtype)  # split-complex (re, im)
+    a2a_bytes = (PROD_N1 // PROD_P) * nf_pad * elem_bytes
     stage1_bytes = (PROD_N1 // PROD_P) * (PROD_N2 * 4 + nf_pad * 8)  # r + w
     wire_s = a2a_bytes / ICI_BW
     window_s = stage1_bytes / HBM_BW
@@ -63,6 +68,22 @@ def main() -> None:
             t,
             f"chunk_overhead={t / t_mono:.2f}x;"
             f"prod_hidden_frac={_hidden_fraction_model(k):.2f}",
+        )
+
+    # wire-compressed variant of the same sweep: bf16 payload halves the
+    # modeled wire time, so more of it hides at the same K (the measured
+    # column again isolates pack+chunk overhead — one device, free wire)
+    for k in OVERLAPS:
+        rfwd, rinv = make_distributed_rfft(
+            mesh, N1, N2, overlap=k, wire_dtype="bf16"
+        )
+        roundtrip = jax.jit(lambda a: rinv(rfwd(a)))
+        t = time_fn(roundtrip, x)
+        emit(
+            f"overlap_rfft_bf16wire_n{n}_k{k}",
+            t,
+            f"overhead_vs_fp32wire_k1={t / t_mono:.2f}x;"
+            f"prod_hidden_frac={_hidden_fraction_model(k, 'bf16'):.2f}",
         )
 
 

@@ -1,0 +1,81 @@
+"""Wire-precision sweep: wire_dtype x overlap K on the distributed matvec.
+
+For every (wire dtype, K) cell this times one planned rfft matvec
+round (two transpose all-to-alls) and reports
+
+  * the measured per-call time — on the in-process one-device mesh the
+    wire is free, so the fp32-relative column isolates the pack/unpack
+    overhead the wire_pack path adds to the chunk pipeline;
+  * the modeled production wire bytes per matvec (both transposes at the
+    cs_dryrun shape), computed from the wire dtype's true itemsize — the
+    2x byte cut bf16/fp16 buy on a real mesh; and
+  * the relative matvec error vs the fp32 wire — the quantity the plan
+    layer's precision guard bounds (repro.ops.plan.WIRE_ERROR_BOUND).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wire_pack.ops import WIRE_DTYPES, wire_itemsize
+
+from .common import emit, pick, time_fn
+
+N1, N2 = pick((256, 256), (16, 16))
+OVERLAPS = pick((1, 2, 4), (1, 2))
+
+# production-shape wire model constants (mirrors launch/cs_dryrun defaults)
+PROD_N1 = PROD_N2 = 4096
+PROD_P = 16
+
+
+def _prod_wire_bytes(wire_dtype: str) -> int:
+    """Modeled all-to-all payload bytes of one production matvec (forward
+    + inverse transpose) per device, at the wire dtype's true itemsize."""
+    nf_pad = -(-(PROD_N2 // 2 + 1) // PROD_P) * PROD_P
+    elem = 2 * wire_itemsize(wire_dtype)  # split-complex (re, im) planes
+    return 2 * (PROD_N1 // PROD_P) * nf_pad * elem
+
+
+def main() -> None:
+    from repro.dist.compat import make_mesh
+    from repro.dist.fft import (
+        layout_2d,
+        make_distributed_matvec,
+        make_distributed_rfft,
+    )
+
+    mesh = make_mesh((1,), ("model",))
+    n = N1 * N2
+    key = jax.random.PRNGKey(0)
+    x2d = layout_2d(jax.random.normal(key, (n,)), N1, N2)
+    col2d = layout_2d(
+        jax.random.normal(jax.random.PRNGKey(1), (n,)) / jnp.sqrt(n), N1, N2
+    )
+    rfwd, _ = make_distributed_rfft(mesh, N1, N2)
+    spec_half = rfwd(col2d)
+
+    ref = None
+    for k in OVERLAPS:
+        for wire in WIRE_DTYPES:
+            mv = make_distributed_matvec(
+                mesh, rfft=True, overlap=k, wire_dtype=wire
+            )
+            t = time_fn(mv, spec_half, x2d)
+            out = mv(spec_half, x2d)
+            if wire == "fp32" and k == OVERLAPS[0]:
+                ref = out
+            rel = float(
+                jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref)
+            )
+            emit(
+                f"wire_{wire}_n{n}_k{k}",
+                t,
+                f"prod_a2a_mb_per_matvec={_prod_wire_bytes(wire) / 1e6:.1f};"
+                f"rel_err_vs_fp32={rel:.2e}",
+            )
+
+
+if __name__ == "__main__":
+    main()

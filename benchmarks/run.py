@@ -32,6 +32,7 @@ SUITE_NAMES = (
     "dist_ista",  # beyond-paper: plan-API distributed CPISTA/FISTA overhead
     "autotune",  # beyond-paper: cost-model plan autotuner vs hand-picked
     "serve",  # beyond-paper: continuous-batching dispatcher vs static batch
+    "wire",  # beyond-paper: wire-compressed collective precision sweep
 )
 
 

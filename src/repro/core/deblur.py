@@ -134,6 +134,7 @@ def build_deblur_plan(
     fused: bool | None = None,
     batch_axis: str | None = None,
     axis_name: str | None = None,
+    wire_dtype: str | None = None,
 ):
     """Lower the joint sensing+blur operator ``A = P (C B)`` to a backend.
 
@@ -170,7 +171,8 @@ def build_deblur_plan(
         # the single validation site rejects distributed-only knobs
         # (rfft/overlap/batch_axis) passed without a mesh
         return _plan(problem.op, config=config, rfft=rfft, overlap=overlap,
-                     tail=tail, fused=fused, batch_axis=batch_axis)
+                     tail=tail, fused=fused, batch_axis=batch_axis,
+                     wire_dtype=wire_dtype)
     h, w = problem.image.shape[-2:]
     if tune:
         pins = {
@@ -178,6 +180,7 @@ def build_deblur_plan(
             for k, v in dict(
                 n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
                 fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+                wire_dtype=wire_dtype,
             ).items()
             if v is not None
         }
@@ -201,7 +204,7 @@ def build_deblur_plan(
     return _plan(
         problem.op, mesh, config=config, n1=n1, n2=n2, rfft=rfft,
         overlap=overlap, tail=tail, fused=fused, batch_axis=batch_axis,
-        axis_name=axis_name,
+        axis_name=axis_name, wire_dtype=wire_dtype,
     )
 
 

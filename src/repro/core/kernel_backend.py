@@ -30,6 +30,17 @@ from repro.kernels.cpadmm_tail.ops import fused_cpadmm_tail
 from repro.kernels.soft_threshold.ops import fused_ista_update
 from repro.kernels.spectral_pointwise.ops import spectral_update
 
+# wire-compressed collectives (plan knob wire_dtype=): the demote-pack /
+# promote-unpack pair the distributed transforms fuse around every transpose
+# all-to-all — registered here like every kernel substrate so both backends
+# share one routing point (dist.fft calls these; re-exported for callers
+# that follow the registry rather than the kernel package).
+from repro.kernels.wire_pack.ops import (  # noqa: F401  (registry re-export)
+    WIRE_DTYPES,
+    pack_wire,
+    unpack_wire,
+)
+
 from .admm import CpadmmConst, CpadmmParams, CpadmmState
 from .circulant import PartialCirculant
 from .ista import IstaParams, IstaState

@@ -69,6 +69,24 @@ layout is a purely local reshape/transpose (``_gather_fwd_chunks`` /
 works on odd extents; the pad rows/columns are sliced off locally before
 the second-stage FFT, so ``overlap=K`` is numerically identical to
 ``overlap=1`` (same flops on the same data, reordered).
+
+Wire-compressed collectives (``wire_dtype=``)
+---------------------------------------------
+After rfft's ~2x byte cut the next lever is fewer bytes *per element* on
+the wire: with ``wire_dtype='bf16'`` (or ``'fp16'``) every transpose
+all-to-all's complex chunk payload is demoted to the wire dtype immediately
+before the collective and promoted back to float32 on arrival
+(:func:`_wire_all_to_all`).  Packing is split-complex — demoted (re, im)
+planes stacked on a new *leading* axis (``repro.kernels.wire_pack``), so
+the trailing split/concat axes of the collective are untouched and each
+plane stays contiguous on the wire.  All
+
+    twiddle multiplies, FFT stages, and accumulation stay float32 locally,
+
+so quantization error enters exactly once per collective and never
+compounds across the K overlap chunks; ``wire_dtype='fp32'`` is the
+bit-exact legacy path (no pack at all).  The plan layer guards the lossy
+dtypes with an error-controlled fp32 fallback (repro.ops.plan).
 """
 
 from __future__ import annotations
@@ -80,6 +98,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+
+# split-complex demote/promote around the transpose collectives; WIRE_DTYPES
+# is re-exported because this module defines the collective those dtypes
+# compress (plan validation and the tuner's candidate space import it here)
+from repro.kernels.wire_pack.ops import WIRE_DTYPES, pack_wire, unpack_wire  # noqa: F401
 
 # Hermitian bookkeeping shared with the core circulant algebra — one
 # definition in repro.ops.spectral, re-exported here because this module
@@ -151,7 +174,40 @@ def _pad_to(x: Array, size: int, axis: int) -> Array:
     return jnp.pad(x, pads)
 
 
-def _fwd_transpose(stage1, a: Array, overlap: int, axis_name: str) -> Array:
+def _wire_all_to_all(
+    t: Array, axis_name: str, split_off: int, concat_off: int, wire_dtype: str
+) -> Array:
+    """One transpose all-to-all with the payload demoted to the wire dtype.
+
+    ``split_off``/``concat_off`` index from the *end* (1 = trailing axis):
+    packing adds a leading (re, im) plane axis, so end-relative axes are the
+    same for the packed and unpacked payloads and the plane axis rides the
+    collective like a batch axis.  ``'fp32'`` is the bit-exact direct send.
+
+    The demoted planes cross the wire *bitcast to uint16*: backends without
+    native 16-bit-float support (e.g. CPU) run a float-normalization pass
+    that silently promotes bf16/fp16 collectives back to f32 — an integer
+    payload is never touched, so the 2-byte wire survives on every backend
+    (and the bitcast is free where bf16 is native).
+    """
+    if wire_dtype == "fp32":
+        return lax.all_to_all(
+            t, axis_name, split_axis=t.ndim - split_off,
+            concat_axis=t.ndim - concat_off, tiled=True,
+        )
+    w = pack_wire(t, wire_dtype)
+    u = lax.bitcast_convert_type(w, jnp.uint16)
+    u = lax.all_to_all(
+        u, axis_name, split_axis=u.ndim - split_off,
+        concat_axis=u.ndim - concat_off, tiled=True,
+    )
+    w = lax.bitcast_convert_type(u, WIRE_DTYPES[wire_dtype])
+    return unpack_wire(w, t.dtype)
+
+
+def _fwd_transpose(
+    stage1, a: Array, overlap: int, axis_name: str, wire_dtype: str = "fp32"
+) -> Array:
     """Chunked forward transpose-collective with the row axis (-2) chunked.
 
     ``stage1(chunk, r0)`` maps a row chunk (rows [r0, r0+cs) of the local
@@ -159,25 +215,20 @@ def _fwd_transpose(stage1, a: Array, overlap: int, axis_name: str) -> Array:
     divisible by the axis size.  Returns the assembled (..., p*n1_loc, W/p)
     block, identical to the monolithic all-to-all output.  Each chunk's
     collective depends only on that chunk's stage-1 compute, so chunk i's
-    all-to-all can fly while chunk i+1's FFT+twiddle runs.
+    all-to-all can fly while chunk i+1's FFT+twiddle runs.  ``wire_dtype``
+    selects the payload precision of every chunk collective.
     """
     n1_loc = a.shape[-2]
     if overlap <= 1:
         b = stage1(a, 0)
-        return lax.all_to_all(
-            b, axis_name, split_axis=b.ndim - 1, concat_axis=b.ndim - 2, tiled=True
-        )
+        return _wire_all_to_all(b, axis_name, 1, 2, wire_dtype)
     p = lax.psum(1, axis_name)
     cs, nch = _chunk_grid(n1_loc, overlap)
     outs = []
     for i in range(nch):
         chunk = _pad_to(a[..., i * cs : min((i + 1) * cs, n1_loc), :], cs, -2)
         t = stage1(chunk, i * cs)  # pad rows are zero; twiddle keeps them zero
-        outs.append(
-            lax.all_to_all(
-                t, axis_name, split_axis=t.ndim - 1, concat_axis=t.ndim - 2, tiled=True
-            )
-        )
+        outs.append(_wire_all_to_all(t, axis_name, 1, 2, wire_dtype))
     return _gather_fwd_chunks(outs, p, cs, n1_loc)
 
 
@@ -198,31 +249,28 @@ def _gather_fwd_chunks(outs, p: int, cs: int, n1_loc: int) -> Array:
     return st.reshape(st.shape[:-3] + (p * n1_loc, w))
 
 
-def _inv_transpose(stage1, F: Array, overlap: int, axis_name: str) -> Array:
+def _inv_transpose(
+    stage1, F: Array, overlap: int, axis_name: str, wire_dtype: str = "fp32"
+) -> Array:
     """Chunked inverse transpose-collective with the column axis (-1) chunked.
 
     ``stage1(chunk, c0)`` maps a column chunk (columns [c0, c0+cs) of the
     local spectrum block ``F``) to its twiddled first-stage output
     (..., n1, cs) with n1 divisible by the axis size.  Returns the assembled
     (..., n1/p, p*C_loc) block, identical to the monolithic output.
+    ``wire_dtype`` selects the payload precision of every chunk collective.
     """
     c_loc = F.shape[-1]
     if overlap <= 1:
         b = stage1(F, 0)
-        return lax.all_to_all(
-            b, axis_name, split_axis=b.ndim - 2, concat_axis=b.ndim - 1, tiled=True
-        )
+        return _wire_all_to_all(b, axis_name, 2, 1, wire_dtype)
     p = lax.psum(1, axis_name)
     cs, nch = _chunk_grid(c_loc, overlap)
     outs = []
     for i in range(nch):
         chunk = _pad_to(F[..., :, i * cs : min((i + 1) * cs, c_loc)], cs, -1)
         t = stage1(chunk, i * cs)  # pad columns are zero and stay zero
-        outs.append(
-            lax.all_to_all(
-                t, axis_name, split_axis=t.ndim - 2, concat_axis=t.ndim - 1, tiled=True
-            )
-        )
+        outs.append(_wire_all_to_all(t, axis_name, 2, 1, wire_dtype))
     return _gather_inv_chunks(outs, p, cs, c_loc)
 
 
@@ -241,13 +289,17 @@ def _gather_inv_chunks(outs, p: int, cs: int, c_loc: int) -> Array:
     return st.reshape(st.shape[:-2] + (p * c_loc,))
 
 
-def fft2_local(a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Array:
+def fft2_local(
+    a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1,
+    wire_dtype: str = "fp32",
+) -> Array:
     """Forward four-step FFT of a row-sharded block.
 
     a: (..., n1/p, n2) complex, rows j1 sharded over ``axis_name``.
     Returns (..., n1, n2/p): the column-sharded spectrum block.
     ``overlap=K`` cuts the rows into K chunks whose transpose-collectives
     overlap the first-stage FFT+twiddle (numerically identical output).
+    ``wire_dtype`` demotes the collective payload (module docstring).
     """
     p = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
@@ -260,11 +312,14 @@ def fft2_local(a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Array
         k2 = jnp.arange(n2)
         return b * _phase(j1[:, None] * k2[None, :], n)
 
-    b = _fwd_transpose(stage1, a, overlap, axis_name)
+    b = _fwd_transpose(stage1, a, overlap, axis_name, wire_dtype)
     return jnp.fft.fft(b, axis=-2)  # over j1 (full after the transpose)
 
 
-def ifft2_local(F: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Array:
+def ifft2_local(
+    F: Array, axis_name: str = MODEL_AXIS, overlap: int = 1,
+    wire_dtype: str = "fp32",
+) -> Array:
     """Inverse four-step FFT of a column-sharded spectrum block.
 
     F: (..., n1, n2/p) complex, columns k2 sharded over ``axis_name``.
@@ -282,11 +337,14 @@ def ifft2_local(F: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Arra
         k2 = idx * n2_loc + c0 + jnp.arange(chunk.shape[-1])  # global columns
         return b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
 
-    b = _inv_transpose(stage1, F, overlap, axis_name)
+    b = _inv_transpose(stage1, F, overlap, axis_name, wire_dtype)
     return jnp.fft.ifft(b, axis=-1)  # over k2 (full after the transpose)
 
 
-def rfft2_local(a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Array:
+def rfft2_local(
+    a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1,
+    wire_dtype: str = "fp32",
+) -> Array:
     """Forward four-step rfft of a row-sharded *real* block.
 
     a: (..., n1/p, n2) real, rows j1 sharded over ``axis_name``.
@@ -308,12 +366,13 @@ def rfft2_local(a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1) -> Arra
         return _pad_to(b, nf_pad, -1)
 
     # transpose-collective on half as many columns: half the wire bytes
-    b = _fwd_transpose(stage1, a, overlap, axis_name)
+    b = _fwd_transpose(stage1, a, overlap, axis_name, wire_dtype)
     return jnp.fft.fft(b, axis=-2)  # over j1, on half as many columns
 
 
 def irfft2_local(
-    F: Array, n2: int, axis_name: str = MODEL_AXIS, overlap: int = 1
+    F: Array, n2: int, axis_name: str = MODEL_AXIS, overlap: int = 1,
+    wire_dtype: str = "fp32",
 ) -> Array:
     """Inverse four-step rfft of a column-sharded half-spectrum block.
 
@@ -333,7 +392,7 @@ def irfft2_local(
         k2 = idx * nfp_loc + c0 + jnp.arange(chunk.shape[-1])  # global columns
         return b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
 
-    b = _inv_transpose(stage1, F, overlap, axis_name)
+    b = _inv_transpose(stage1, F, overlap, axis_name, wire_dtype)
     return jnp.fft.irfft(b[..., :nf], n=n2, axis=-1)  # drop pad, real out
 
 
@@ -343,6 +402,7 @@ def matvec_local(
     axis_name: str = MODEL_AXIS,
     transpose: bool = False,
     overlap: int = 1,
+    wire_dtype: str = "fp32",
 ) -> Array:
     """Sharded circulant matvec on local blocks: irfft(spec * fft(x)).
 
@@ -350,9 +410,9 @@ def matvec_local(
     the circulant's first column.  x: row-sharded real block (..., n1/p, n2).
     ``transpose=True`` applies C^T (conjugate spectrum, real circulant).
     """
-    f = fft2_local(x.astype(spec.dtype), axis_name, overlap)
+    f = fft2_local(x.astype(spec.dtype), axis_name, overlap, wire_dtype)
     s = jnp.conj(spec) if transpose else spec
-    return jnp.real(ifft2_local(s * f, axis_name, overlap))
+    return jnp.real(ifft2_local(s * f, axis_name, overlap, wire_dtype))
 
 
 def rmatvec_local(
@@ -361,6 +421,7 @@ def rmatvec_local(
     axis_name: str = MODEL_AXIS,
     transpose: bool = False,
     overlap: int = 1,
+    wire_dtype: str = "fp32",
 ) -> Array:
     """Half-spectrum circulant matvec: same contract as :func:`matvec_local`
     with ``spec_h`` the column-sharded *half* spectrum from rfft2_local.
@@ -370,9 +431,9 @@ def rmatvec_local(
     under the multiply and the inverse transform returns the real result.
     """
     n2 = x.shape[-1]
-    f = rfft2_local(x, axis_name, overlap)
+    f = rfft2_local(x, axis_name, overlap, wire_dtype)
     s = jnp.conj(spec_h) if transpose else spec_h
-    return irfft2_local(s * f, n2, axis_name, overlap)
+    return irfft2_local(s * f, n2, axis_name, overlap, wire_dtype)
 
 
 # --------------------------------------------------------------------------
@@ -401,6 +462,7 @@ def make_distributed_fft(
     axis_name: str = MODEL_AXIS,
     batch_axis: str | None = None,
     overlap: int = 1,
+    wire_dtype: str = "fp32",
 ) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
     """(fft2d, ifft2d) over global (n1, n2) arrays on ``mesh``.
 
@@ -410,13 +472,17 @@ def make_distributed_fft(
     stage; same payload modulo chunk zero-padding, same result).
     With ``batch_axis`` the arrays are
     (B, n1, n2) with B sharded over that mesh axis — the whole batch shares
-    the one collective.
+    the one collective.  ``wire_dtype`` demotes the collective payload
+    (module docstring; 'fp32' is bit-exact).
     """
     del n1, n2  # shapes are taken from the traced operands
 
     fwd = jax.jit(
         shard_map(
-            functools.partial(fft2_local, axis_name=axis_name, overlap=overlap),
+            functools.partial(
+                fft2_local, axis_name=axis_name, overlap=overlap,
+                wire_dtype=wire_dtype,
+            ),
             mesh=mesh,
             in_specs=(row_spec(axis_name, batch_axis),),
             out_specs=col_spec(axis_name, batch_axis),
@@ -425,7 +491,10 @@ def make_distributed_fft(
     )
     inv = jax.jit(
         shard_map(
-            functools.partial(ifft2_local, axis_name=axis_name, overlap=overlap),
+            functools.partial(
+                ifft2_local, axis_name=axis_name, overlap=overlap,
+                wire_dtype=wire_dtype,
+            ),
             mesh=mesh,
             in_specs=(col_spec(axis_name, batch_axis),),
             out_specs=row_spec(axis_name, batch_axis),
@@ -442,6 +511,7 @@ def make_distributed_rfft(
     axis_name: str = MODEL_AXIS,
     batch_axis: str | None = None,
     overlap: int = 1,
+    wire_dtype: str = "fp32",
 ) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
     """(rfft2d, irfft2d): half-spectrum transforms over real (n1, n2) arrays.
 
@@ -449,13 +519,17 @@ def make_distributed_rfft(
     half spectrum (n1, padded_rfft_len(n2, p)); irfft2d inverts it back to
     the real signal layout.  Same single all-to-all as the full path, at
     half the wire bytes and half the local FFT flops; ``overlap=K`` chunks
-    that collective to overlap it with the first FFT stage.
+    that collective to overlap it with the first FFT stage, ``wire_dtype``
+    demotes its payload for another ~2x byte cut.
     """
     del n1  # taken from the traced operands; n2 is needed by the inverse
 
     rfwd = jax.jit(
         shard_map(
-            functools.partial(rfft2_local, axis_name=axis_name, overlap=overlap),
+            functools.partial(
+                rfft2_local, axis_name=axis_name, overlap=overlap,
+                wire_dtype=wire_dtype,
+            ),
             mesh=mesh,
             in_specs=(row_spec(axis_name, batch_axis),),
             out_specs=col_spec(axis_name, batch_axis),
@@ -464,7 +538,10 @@ def make_distributed_rfft(
     )
     rinv = jax.jit(
         shard_map(
-            functools.partial(irfft2_local, n2=n2, axis_name=axis_name, overlap=overlap),
+            functools.partial(
+                irfft2_local, n2=n2, axis_name=axis_name, overlap=overlap,
+                wire_dtype=wire_dtype,
+            ),
             mesh=mesh,
             in_specs=(col_spec(axis_name, batch_axis),),
             out_specs=row_spec(axis_name, batch_axis),
@@ -480,6 +557,7 @@ def make_distributed_matvec(
     rfft: bool = False,
     batch_axis: str | None = None,
     overlap: int = 1,
+    wire_dtype: str = "fp32",
 ):
     """Jitted ``mv(spec2d, x2d, transpose=False)`` over global arrays.
 
@@ -487,7 +565,8 @@ def make_distributed_matvec(
     multiply is purely local.  ``rfft=True`` takes the half-spectrum path:
     ``spec2d`` is then the (n1, pad(nf)) half spectrum from
     :func:`make_distributed_rfft`'s forward transform.  ``overlap=K`` runs
-    both transforms with the chunked overlapped transpose.  ``mv.lower(...)``
+    both transforms with the chunked overlapped transpose; ``wire_dtype``
+    demotes both collectives' payloads.  ``mv.lower(...)``
     exposes the compiled HLO for the collective-structure assertions in
     tests/dist_progs/fft_prog.py.
     """
@@ -497,7 +576,8 @@ def make_distributed_matvec(
     def mv(spec2d: Array, x2d: Array, transpose: bool = False) -> Array:
         fn = shard_map(
             functools.partial(
-                local, axis_name=axis_name, transpose=transpose, overlap=overlap
+                local, axis_name=axis_name, transpose=transpose,
+                overlap=overlap, wire_dtype=wire_dtype,
             ),
             mesh=mesh,
             in_specs=(col_spec(axis_name), row_spec(axis_name, batch_axis)),

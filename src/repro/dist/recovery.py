@@ -91,20 +91,25 @@ from .fft import (
 Array = jax.Array
 
 
-def _transforms(rfft: bool, n2: int, cdtype, axis_name: str, overlap: int = 1):
+def _transforms(
+    rfft: bool, n2: int, cdtype, axis_name: str, overlap: int = 1,
+    wire_dtype: str = "fp32",
+):
     """(forward, inverse) local transform pair: real block <-> spectrum block.
 
     The full-complex pair casts to the spectrum dtype and takes the real
     part on the way back; the rfft pair stays real-in/real-out in the half
     layout (``n2`` is the full column count the half spectrum unfolds to).
-    ``overlap`` selects the chunked overlapped transpose in both directions.
+    ``overlap`` selects the chunked overlapped transpose in both directions;
+    ``wire_dtype`` demotes each transpose's all-to-all payload on the wire
+    (twiddles and accumulation stay fp32 locally — repro.dist.fft).
     """
     if rfft:
-        fwd = lambda r: rfft2_local(r, axis_name, overlap)
-        inv = lambda F: irfft2_local(F, n2, axis_name, overlap)
+        fwd = lambda r: rfft2_local(r, axis_name, overlap, wire_dtype)
+        inv = lambda F: irfft2_local(F, n2, axis_name, overlap, wire_dtype)
     else:
-        fwd = lambda r: fft2_local(r.astype(cdtype), axis_name, overlap)
-        inv = lambda F: jnp.real(ifft2_local(F, axis_name, overlap))
+        fwd = lambda r: fft2_local(r.astype(cdtype), axis_name, overlap, wire_dtype)
+        inv = lambda F: jnp.real(ifft2_local(F, axis_name, overlap, wire_dtype))
     return fwd, inv
 
 
@@ -163,6 +168,7 @@ def dist_cpadmm_step(
     rfft: bool = False,
     overlap: int = 1,
     tail: str = "jnp",
+    wire_dtype: str = "fp32",
 ) -> DistCpadmmState:
     """One paper-faithful Alg. 3 iteration on local shard blocks.
 
@@ -171,7 +177,9 @@ def dist_cpadmm_step(
     pty: row-sharded P^T y.  Mirrors ``core.admm.cpadmm_step`` line for
     line; broadcasts over leading batch axes.
     """
-    fwd, inv = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name, overlap)
+    fwd, inv = _transforms(
+        rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype
+    )
     tail_fn = _tail(tail)
 
     def apply(s: Array, r: Array) -> Array:
@@ -199,6 +207,7 @@ def dist_cpadmm_step_fused(
     rfft: bool = False,
     overlap: int = 1,
     tail: str = "jnp",
+    wire_dtype: str = "fp32",
 ) -> DistCpadmmState:
     """Fused Alg. 3 iteration: 2 all-to-alls, one elementwise tail.
 
@@ -212,7 +221,9 @@ def dist_cpadmm_step_fused(
     chunks both stacked transposes.  Broadcasts over leading batch axes
     (the stack axis leads them).
     """
-    fwd_t, inv_t = _transforms(rfft, state.x.shape[-1], spec.dtype, axis_name, overlap)
+    fwd_t, inv_t = _transforms(
+        rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype
+    )
     tail_fn = _tail(tail)
     fwd = fwd_t(jnp.stack([state.v + state.mu, state.z - state.nu]))
     w, zf = fwd[0], fwd[1]
@@ -265,6 +276,7 @@ def make_dist_cpadmm(
     batch_axis: str | None = None,
     overlap: int = 1,
     tail: str = "jnp",
+    wire_dtype: str = "fp32",
 ):
     """DEPRECATED shim: jitted solver(spec2d, mask2d, y2d, alpha, rho, sigma).
 
@@ -300,7 +312,7 @@ def make_dist_cpadmm(
         pl = plan_from_parts(
             mesh, spec2d, mask2d,
             n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail, fused=fused,
-            batch_axis=batch_axis, axis_name=axis_name,
+            batch_axis=batch_axis, axis_name=axis_name, wire_dtype=wire_dtype,
         )
         prob = RecoveryProblem(op=pl.operator, y=unlayout_2d(y2d))
         z, _ = solve(

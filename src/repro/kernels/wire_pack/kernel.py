@@ -1,0 +1,94 @@
+"""Pallas TPU kernels: demote-pack / promote-unpack for wire-compressed
+collectives.
+
+The four-step transpose all-to-all (repro.dist.fft) moves complex chunk
+payloads between devices.  With ``wire_dtype='bf16'``/``'fp16'`` the payload
+is demoted right before the collective and promoted right after — these
+kernels are that cast, fused into the chunk pipeline as one VMEM pass per
+direction instead of separate real/imag/stack/cast XLA ops:
+
+    pack    re, im float32 tiles -> one (2, block) wire-dtype tile
+    unpack  one (2, block) wire-dtype tile -> re, im float32 tiles
+
+Split-complex layout (separate re/im planes on a new leading axis) keeps
+the trailing axes — the ones the all-to-all splits and concats over —
+contiguous and untouched, so the collective treats the plane axis like a
+batch axis.  Tiling mirrors kernels/cpadmm_tail: 1-D tiles over the
+flattened payload, padded to a block multiple and sliced back after.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _pack_kernel(re_ref, im_ref, out_ref):
+    dt = out_ref.dtype
+    out_ref[0, :] = re_ref[...].astype(dt)
+    out_ref[1, :] = im_ref[...].astype(dt)
+
+
+def _unpack_kernel(w_ref, re_ref, im_ref):
+    re_ref[...] = w_ref[0, :].astype(jnp.float32)
+    im_ref[...] = w_ref[1, :].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("wire_dtype", "block", "interpret")
+)
+def pack_wire_pallas(
+    re: jax.Array,  # (L,) float32
+    im: jax.Array,  # (L,) float32
+    *,
+    wire_dtype,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """-> (2, L) wire-dtype planes: row 0 = re, row 1 = im, demoted."""
+    L = re.shape[-1]
+    pad = (-L) % block
+    if pad:
+        re = jnp.pad(re, (0, pad))
+        im = jnp.pad(im, (0, pad))
+    n = re.shape[-1]
+    tile = pl.BlockSpec((block,), lambda i: i)
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=(n // block,),
+        in_specs=[tile, tile],
+        out_specs=pl.BlockSpec((2, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, n), jnp.dtype(wire_dtype)),
+        interpret=interpret,
+    )(re, im)
+    return out[:, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def unpack_wire_pallas(
+    w: jax.Array,  # (2, L) wire dtype
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """-> (re, im) float32 (L,) planes promoted from the wire payload."""
+    L = w.shape[-1]
+    pad = (-L) % block
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    n = w.shape[-1]
+    tile = pl.BlockSpec((block,), lambda i: i)
+    re, im = pl.pallas_call(
+        _unpack_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((2, block), lambda i: (0, i))],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(w)
+    return re[:L], im[:L]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the wire pack/unpack pair.
+
+Split-complex packing for the transpose all-to-all: a complex payload is
+demoted to a real wire dtype as two stacked planes (re, im) on a new
+*leading* axis, so the trailing axes the collective splits/concats over are
+untouched and each plane stays contiguous on the wire.  Unpack promotes
+back to float32 parts and recombines — quantization error enters exactly
+once per collective, never compounding through twiddles or accumulation
+(those stay fp32 locally; see repro.dist.fft).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def pack_wire_ref(z, wire_dtype):
+    """Complex (...,) -> real (2, ...) planes demoted to ``wire_dtype``."""
+    return jnp.stack([jnp.real(z), jnp.imag(z)]).astype(wire_dtype)
+
+
+def unpack_wire_ref(w, out_dtype=jnp.complex64):
+    """Real (2, ...) wire planes -> complex (...,) promoted via float32."""
+    u = w.astype(jnp.float32)
+    return lax.complex(u[0], u[1]).astype(out_dtype)

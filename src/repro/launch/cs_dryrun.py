@@ -24,6 +24,11 @@ paper's Sec. 7 deblurring.  Four variants of the iteration are compared:
                 K does not divide the chunked extent — the win is latency,
                 reported as
                 the hidden-collective fraction / effective collective time)
+    wire_bf16   overlap with wire_dtype='bf16': every chunk payload demoted
+                to split-complex bf16 planes right before its collective
+                (dist/fft wire packing), halving the bytes that actually
+                cross the wire — the modeled collective bytes come from the
+                compiled HLO, so the table reflects the true wire dtype
 
 This is the §Perf hillclimb cell for the paper's technique: the printed
 per-signal FFT-flop and wire-byte ratios are the measured value of each
@@ -48,16 +53,18 @@ from repro.ops import plan_from_parts
 
 SDS = jax.ShapeDtypeStruct
 
-VARIANTS = (  # (tag, fused, rfft, overlap)
-    ("baseline", False, False, 1),
-    ("fused", True, False, 1),
-    ("fused_rfft", True, True, 1),
-    ("overlap", True, True, 4),
+VARIANTS = (  # (tag, fused, rfft, overlap, wire_dtype)
+    ("baseline", False, False, 1, "fp32"),
+    ("fused", True, False, 1, "fp32"),
+    ("fused_rfft", True, True, 1, "fp32"),
+    ("overlap", True, True, 4, "fp32"),
+    ("wire_bf16", True, True, 4, "bf16"),
 )
 
 
 def lower_variant(
-    mesh, n1, n2, batch, iters, fused, rfft=False, overlap=1, axis_name="model"
+    mesh, n1, n2, batch, iters, fused, rfft=False, overlap=1,
+    wire_dtype="fp32", axis_name="model",
 ):
     """Lower one iteration block through the plan API's abstract entry point
     (``ExecutionPlan.cpadmm_block``): the batch rides (pod x) data, each
@@ -66,7 +73,7 @@ def lower_variant(
     dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     pl = plan_from_parts(
         mesh, n1=n1, n2=n2, rfft=rfft, overlap=overlap, fused=fused,
-        batch_axis=dp, axis_name=axis_name,
+        batch_axis=dp, axis_name=axis_name, wire_dtype=wire_dtype,
     )
     block = pl.cpadmm_block(iters)
     model_size = mesh.shape[axis_name]
@@ -110,12 +117,14 @@ def main():
 
     mesh = make_production_mesh(multi_pod=args.multipod)
     results = {}
-    for tag, fused, rfft, overlap in VARIANTS:
+    for tag, fused, rfft, overlap, wire in VARIANTS:
         t0 = time.time()
         compiled = lower_variant(
-            mesh, args.n1, args.n2, args.batch, args.iters, fused, rfft, overlap
+            mesh, args.n1, args.n2, args.batch, args.iters, fused, rfft,
+            overlap, wire,
         )
         res = analyze(compiled, args.iters, args.batch, overlap)
+        res["wire_dtype"] = wire
         mem = compiled.memory_analysis()
         res["hbm_need_gb"] = (
             getattr(mem, "argument_size_in_bytes", 0)
@@ -136,7 +145,7 @@ def main():
             f"a2a/iter={res['per_iter_a2a']:.1f}  HBM {res['hbm_need_gb']:.1f}GB"
         )
     b, f, r = results["baseline"], results["fused"], results["fused_rfft"]
-    o = results["overlap"]
+    o, w = results["overlap"], results["wire_bf16"]
     print(
         f"fused vs baseline: collective {b['collective_s']/max(f['collective_s'],1e-12):.2f}x down, "
         f"flops {b['flops_per_dev']/max(f['flops_per_dev'],1):.2f}x down, "
@@ -158,11 +167,21 @@ def main():
         f"{r['collective_s']*1e3:.1f}ms -> {o['effective_collective_s']*1e3:.1f}ms "
         f"per {args.iters}-iter block"
     )
+    print(
+        f"wire_bf16 vs overlap(fp32 wire): per-signal all-to-all bytes "
+        f"{o['a2a_bytes_per_signal']/max(w['a2a_bytes_per_signal'],1):.2f}x "
+        f"down (split-complex bf16 planes, same chunk schedule); vs "
+        f"fused_rfft "
+        f"{r['a2a_bytes_per_signal']/max(w['a2a_bytes_per_signal'],1):.2f}x"
+    )
+    # a2a bytes come from the compiled HLO's operand dtypes (hlo_analysis
+    # DTYPE_BYTES) — the wire dtype's true itemsize, not the spectrum dtype's
     per_sig = {
         t: {
             "flops_per_signal": results[t]["flops_per_signal"],
             "a2a_bytes_per_signal": results[t]["a2a_bytes_per_signal"],
             "effective_collective_s": results[t]["effective_collective_s"],
+            "wire_dtype": results[t]["wire_dtype"],
         }
         for t, *_ in VARIANTS
     }
@@ -171,7 +190,8 @@ def main():
         print(
             f"  {t:10s} flops {row['flops_per_signal']/1e9:8.2f}G  "
             f"a2a {row['a2a_bytes_per_signal']/1e6:7.1f}MB  "
-            f"eff-collective {row['effective_collective_s']*1e3:6.1f}ms"
+            f"eff-collective {row['effective_collective_s']*1e3:6.1f}ms  "
+            f"wire={row['wire_dtype']}"
         )
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     json.dump(

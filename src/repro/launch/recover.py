@@ -102,6 +102,12 @@ def _parser() -> argparse.ArgumentParser:
                     help="half-spectrum distributed transforms (with --mesh)")
     ap.add_argument("--overlap", type=int, default=1,
                     help="chunked-transpose overlap factor K (with --mesh)")
+    ap.add_argument("--wire-dtype", default="fp32",
+                    choices=("fp32", "bf16", "fp16"),
+                    help="transpose all-to-all payload precision (with "
+                         "--mesh): bf16/fp16 halve the wire bytes; lossy "
+                         "wires are guarded by an fp32 fallback past the "
+                         "plan layer's precision bound")
     ap.add_argument("--tune", nargs="?", const="model", default=None,
                     choices=("model", "measure"),
                     help="autotune the plan config (repro.ops.tune): bare "
@@ -138,7 +144,7 @@ def parse_mesh(mesh_arg: str | None):
 
 
 def build_plan(op, mesh_arg: str | None, n1=None, rfft=False, overlap=1,
-               config=None, tune=None, batch=None):
+               config=None, tune=None, batch=None, wire_dtype="fp32"):
     """Lower ``op`` per the CLI mesh spec: None (local) or 'M' / 'DxM'.
 
     ``config=`` forwards a full ``repro.ops.PlanConfig``; ``tune=`` asks the
@@ -159,14 +165,17 @@ def build_plan(op, mesh_arg: str | None, n1=None, rfft=False, overlap=1,
             pins["n1"] = n1
         if batch_axis is not None:
             pins["batch_axis"] = batch_axis
+        if wire_dtype != "fp32":
+            pins["wire_dtype"] = wire_dtype
         return plan(op, mesh, config=config, tune=tune, batch=batch, **pins)
     if config is not None:
         return plan(op, mesh, config=config)
     if mesh is None:
-        # the single validation site rejects --rfft/--overlap without --mesh
-        return plan(op, rfft=rfft, overlap=overlap)
+        # the single validation site rejects --rfft/--overlap/--wire-dtype
+        # without --mesh
+        return plan(op, rfft=rfft, overlap=overlap, wire_dtype=wire_dtype)
     return plan(op, mesh, n1=n1, rfft=rfft, overlap=overlap,
-                batch_axis=batch_axis)
+                batch_axis=batch_axis, wire_dtype=wire_dtype)
 
 
 def build_deblur_workload(args):
@@ -200,13 +209,18 @@ def build_deblur_workload(args):
             pins["overlap"] = args.overlap
         if args.n1 is not None:
             pins["n1"] = args.n1
+        if args.wire_dtype != "fp32":
+            pins["wire_dtype"] = args.wire_dtype
         pl = build_deblur_plan(dp, mesh, tune=args.tune, batch=args.batch,
                                **pins)
     else:
         pl = build_deblur_plan(dp, mesh, n1=args.n1,
                                rfft=args.rfft or None,
                                overlap=args.overlap if args.overlap != 1 else None,
-                               batch_axis=batch_axis)
+                               batch_axis=batch_axis,
+                               wire_dtype=(args.wire_dtype
+                                           if args.wire_dtype != "fp32"
+                                           else None))
     return prob, pl, dp
 
 
@@ -249,7 +263,7 @@ def main(argv=None):
         prob = RecoveryProblem(op=op, y=op.matvec(x_true), x_true=x_true)
         pl = build_plan(op, args.mesh, n1=args.n1, rfft=args.rfft,
                         overlap=args.overlap, tune=args.tune,
-                        batch=args.batch)
+                        batch=args.batch, wire_dtype=args.wire_dtype)
     if args.tune:
         print(f"tuned plan [{args.tune}]: {pl.config.describe()}")
     x_true = prob.x_true

@@ -10,7 +10,11 @@ flops/bytes come from the trip-count-aware HLO walk (launch/hlo_analysis.py —
 XLA's own cost_analysis counts while bodies once, see that module's header).
 Wire bytes apply per-op multipliers for ring algorithms: all-reduce moves
 2(d-1)/d ~ 2x its payload, all-gather/reduce-scatter/all-to-all ~ 1x, with
-the result-shape payload parsed per op.  The multi-pod mesh discounts ICI
+the result-shape payload parsed per op.  Payload bytes use the operand's
+*own* dtype itemsize (hlo_analysis.DTYPE_BYTES), so wire-compressed
+collectives (``wire_dtype='bf16'``/``'fp16'`` plans, whose transpose
+payloads cross as 2-byte planes) are modeled at their true wire size with
+no special-casing here.  The multi-pod mesh discounts ICI
 bandwidth for nothing — cross-pod DCN is slower, so multipod collective
 terms are *lower bounds* (flagged in the table).
 

@@ -31,6 +31,10 @@ Plan attributes = backend knobs
                 local backend too via core.kernel_backend
     fused       frequency-domain CPADMM x-update (2 all-to-alls/iter vs 6)
     batch_axis  mesh axis a leading batch of signals is sharded over
+    wire_dtype  'fp32' (default) / 'bf16' / 'fp16' — the transpose
+                all-to-all payload precision (repro.dist.fft wire packing);
+                ``plan`` guards demoted wires with a one-matvec precision
+                probe and falls back to fp32 past :data:`WIRE_ERROR_BOUND`
 
 All knobs live in one frozen, hashable :class:`PlanConfig` (also carrying
 the four-step ``n1 x n2`` factorization and the mesh ``axis_name``): every
@@ -52,6 +56,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -62,6 +68,7 @@ from jax.sharding import PartitionSpec as P
 from repro.dist.compat import shard_map
 from repro.dist.fft import (
     MODEL_AXIS,
+    WIRE_DTYPES,
     layout_2d,
     matvec_local,
     rmatvec_local,
@@ -79,6 +86,13 @@ from . import spectral
 Array = jax.Array
 
 _ISTA_METHODS = ("ista", "fista", "cpista")
+
+# wire-precision guard: plan(..) with wire_dtype != 'fp32' probes one matvec
+# against the fp32-wire plan and falls back (RuntimeWarning) when the
+# relative error exceeds this bound.  Overridable for experiments via the
+# REPRO_WIRE_ERROR_BOUND env var; the documented default tolerates bf16's
+# ~3 decimal digits across the two transposes of a matvec with margin.
+WIRE_ERROR_BOUND = float(os.environ.get("REPRO_WIRE_ERROR_BOUND", "1e-2"))
 
 
 def _factorize(n: int, n1: Optional[int], n2: Optional[int], p: int, rfft: bool):
@@ -141,6 +155,7 @@ class PlanConfig:
     n1: Optional[int] = None
     n2: Optional[int] = None
     axis_name: str = MODEL_AXIS
+    wire_dtype: str = "fp32"
 
     def validate(self, distributed: bool) -> "PlanConfig":
         """THE validation site for plan knobs (every entry point funnels
@@ -149,6 +164,20 @@ class PlanConfig:
             raise ValueError(f"tail must be 'jnp' or 'pallas', got {self.tail!r}")
         if not isinstance(self.overlap, int) or self.overlap < 1:
             raise ValueError(f"overlap must be a positive int, got {self.overlap!r}")
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"wire_dtype must be one of {sorted(WIRE_DTYPES)}, got "
+                f"{self.wire_dtype!r}"
+            )
+        if not distributed and self.wire_dtype != "fp32":
+            raise ValueError(
+                f"wire_dtype={self.wire_dtype!r} compresses the transpose "
+                f"all-to-all payload of the *distributed* four-step "
+                f"transforms — a local (mesh=None) plan has no wire to "
+                f"compress and would silently ignore it; pass a mesh or "
+                f"leave wire_dtype='fp32' (valid values: "
+                f"{sorted(WIRE_DTYPES)})"
+            )
         if not distributed and (
             self.rfft or self.overlap != 1 or self.batch_axis is not None
         ):
@@ -189,6 +218,8 @@ class PlanConfig:
             parts.append("unfused")
         if self.batch_axis is not None:
             parts.append(f"batch_axis={self.batch_axis}")
+        if self.wire_dtype != "fp32":
+            parts.append(f"wire={self.wire_dtype}")
         return " ".join(parts)
 
 
@@ -278,6 +309,7 @@ class ExecutionPlan:
     fused: bool = True
     batch_axis: Any = None
     axis_name: str = MODEL_AXIS
+    wire_dtype: str = "fp32"
     spec2d: Any = None
     mask2d: Any = None
     norm_bound: Any = None
@@ -300,6 +332,7 @@ class ExecutionPlan:
             n1=self.n1,
             n2=self.n2,
             axis_name=self.axis_name,
+            wire_dtype=self.wire_dtype,
         )
 
     @property
@@ -339,6 +372,7 @@ class ExecutionPlan:
                 axis_name=self.axis_name,
                 transpose=transpose,
                 overlap=self.overlap,
+                wire_dtype=self.wire_dtype,
             ),
             mesh=self.mesh,
             in_specs=(self._col(False), self._row(batched)),
@@ -441,6 +475,7 @@ class ExecutionPlan:
             return step_fn(
                 spec, bs, dd, pty, state, pp,
                 self.axis_name, self.rfft, self.overlap, self.tail,
+                self.wire_dtype,
             )
 
         step_sm = shard_map(
@@ -478,6 +513,7 @@ class ExecutionPlan:
                 return step_fn(
                     spec, b_spec, d_diag, pty, s, p,
                     self.axis_name, self.rfft, self.overlap, self.tail,
+                    self.wire_dtype,
                 ), None
 
             state, _ = lax.scan(body, state, None, length=iters)
@@ -522,6 +558,40 @@ class _Layout2DOperator:
         return self._plan.norm_bound
 
 
+def _wire_guard(wire_plan: ExecutionPlan) -> ExecutionPlan:
+    """Error-controlled wire precision: probe one matvec of the demoted-wire
+    plan against the fp32-wire twin and fall back when the relative error
+    exceeds :data:`WIRE_ERROR_BOUND` (``REPRO_WIRE_ERROR_BOUND`` env).
+
+    The probe is cheap (one planned matvec each way on a unit-norm random
+    signal) and catches both gradual quantization loss and hard fp16
+    overflow (payload magnitudes past float16's 65504 max turn the probe
+    error non-finite, which fails the ``err <= bound`` check).
+    """
+    if wire_plan.wire_dtype == "fp32":
+        return wire_plan
+    ref_plan = dataclasses.replace(wire_plan, wire_dtype="fp32")
+    n = wire_plan.n1 * wire_plan.n2
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    x = x / jnp.linalg.norm(x)
+    got = wire_plan.matvec(x)
+    ref = ref_plan.matvec(x)
+    denom = jnp.linalg.norm(ref)
+    err = float(jnp.linalg.norm(got - ref) / jnp.where(denom > 0, denom, 1.0))
+    bound = WIRE_ERROR_BOUND
+    if not err <= bound:  # noqa: SIM300  (NaN/inf must fail the guard too)
+        warnings.warn(
+            f"wire_dtype={wire_plan.wire_dtype!r} failed the precision "
+            f"guard: relative matvec error {err:.3e} exceeds the bound "
+            f"{bound:.1e} (REPRO_WIRE_ERROR_BOUND) — falling back to "
+            f"wire_dtype='fp32'",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        return ref_plan
+    return wire_plan
+
+
 def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
     """Lower ``op`` under an already-validated ``PlanConfig``."""
     if mesh is None:
@@ -550,7 +620,7 @@ def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
         spectral.spectrum_layout_2d(circ.spec, n1, n2, rfft=cfg.rfft, p=p),
         jax.sharding.NamedSharding(mesh, P(None, cfg.axis_name)),
     )
-    return ExecutionPlan(
+    built = ExecutionPlan(
         op=op,
         mesh=mesh,
         n1=n1,
@@ -561,10 +631,12 @@ def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
         fused=cfg.fused,
         batch_axis=cfg.batch_axis,
         axis_name=cfg.axis_name,
+        wire_dtype=cfg.wire_dtype,
         spec2d=spec2d,
         mask2d=layout_2d(mask, n1, n2),
         norm_bound=op.operator_norm_bound(),
     )
+    return _wire_guard(built)
 
 
 def plan(
@@ -583,6 +655,7 @@ def plan(
     fused: Optional[bool] = None,
     batch_axis: Any = None,
     axis_name: Optional[str] = None,
+    wire_dtype: Optional[str] = None,
 ) -> ExecutionPlan:
     """Lower ``op`` to an execution plan (see module docstring).
 
@@ -622,6 +695,7 @@ def plan(
             for k, v in dict(
                 n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
                 fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+                wire_dtype=wire_dtype,
             ).items()
             if v is not None
         }
@@ -636,6 +710,7 @@ def plan(
             distributed=mesh is not None,
             n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
             fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+            wire_dtype=wire_dtype,
         )
     return _plan_with_config(op, mesh, cfg)
 
@@ -654,6 +729,7 @@ def plan_from_parts(
     fused: Optional[bool] = None,
     batch_axis: Any = None,
     axis_name: Optional[str] = None,
+    wire_dtype: Optional[str] = None,
 ) -> ExecutionPlan:
     """Distributed plan from pre-sharded parts instead of an operator.
 
@@ -672,6 +748,7 @@ def plan_from_parts(
         distributed=True,
         n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
         fused=fused, batch_axis=batch_axis, axis_name=axis_name,
+        wire_dtype=wire_dtype,
     )
     if cfg.n1 is None or cfg.n2 is None:
         raise ValueError(
@@ -679,6 +756,8 @@ def plan_from_parts(
             "must carry a concrete n1 x n2 factorization"
         )
     norm = jnp.max(jnp.abs(spec2d)) if spec2d is not None else None
+    # no precision guard here: this entry point also serves the abstract
+    # lowerings (no concrete spec2d at all) — plan() is the guarded route
     return ExecutionPlan(
         mesh=mesh,
         n1=cfg.n1,
@@ -689,6 +768,7 @@ def plan_from_parts(
         fused=cfg.fused,
         batch_axis=cfg.batch_axis,
         axis_name=cfg.axis_name,
+        wire_dtype=cfg.wire_dtype,
         spec2d=spec2d,
         mask2d=mask2d,
         norm_bound=norm,

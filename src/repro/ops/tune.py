@@ -272,6 +272,11 @@ def candidate_configs(
     else:
         tails = ("jnp",)  # the pallas tail interprets (slowly) off-TPU
     fuseds = (pins["fused"],) if "fused" in pins else (True,)
+    # default wire sweep stops at bf16: same exponent range as fp32, so the
+    # plan()-side precision guard essentially always accepts it; fp16 (more
+    # mantissa, tiny range) is opt-in via a pin — overflow on large-magnitude
+    # spectra would make the guard demote it back to fp32 anyway
+    wires = (pins["wire_dtype"],) if "wire_dtype" in pins else ("fp32", "bf16")
 
     if "batch_axis" in pins:
         batch_axes: List[Any] = [pins["batch_axis"]]
@@ -296,12 +301,13 @@ def candidate_configs(
             for tail in tails:
                 for fused in fuseds:
                     for ba in batch_axes:
-                        for K in overlaps:
-                            out.append(PlanConfig(
-                                rfft=rfft, overlap=K, tail=tail, fused=fused,
-                                batch_axis=ba, n1=n1, n2=n2,
-                                axis_name=axis_name,
-                            ))
+                        for wire in wires:
+                            for K in overlaps:
+                                out.append(PlanConfig(
+                                    rfft=rfft, overlap=K, tail=tail,
+                                    fused=fused, batch_axis=ba, n1=n1, n2=n2,
+                                    axis_name=axis_name, wire_dtype=wire,
+                                ))
     if not out:
         raise ValueError(
             f"no feasible plan candidates for n={n} over a {p}-device "
@@ -316,9 +322,13 @@ def candidate_configs(
 
 
 def _group_key(cfg: PlanConfig) -> tuple:
-    """Candidates equal up to overlap share one compile (see module header)."""
+    """Candidates equal up to overlap share one compile (see module header).
+
+    ``wire_dtype`` is part of the key: demoting the wire changes the
+    compiled collective's payload bytes (the HLO the cost walk reads), not
+    just its schedule — so fp32 and bf16 wires never share a compile."""
     return (cfg.rfft, cfg.n1, cfg.n2, cfg.tail, cfg.fused, cfg.batch_axis,
-            cfg.axis_name)
+            cfg.axis_name, cfg.wire_dtype)
 
 
 def _compile_group(mesh, cfg: PlanConfig, batch: int, iters: int):

@@ -78,6 +78,9 @@ class RecoveryServer:
 
     # -- bucketing ---------------------------------------------------------
     def bucket_key(self, req: RecoveryRequest) -> str:
+        # cfg.describe() carries every plan knob that changes the compiled
+        # program — including wire_dtype (a "wire=bf16" tag when demoted),
+        # so mixed-precision-wire requests never share a lane with fp32 ones
         cfg = req.plan_config
         cfg_tag = cfg.describe() if cfg is not None else f"tune={self.tune}"
         return "|".join([

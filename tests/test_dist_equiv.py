@@ -336,3 +336,76 @@ def test_dist_cpadmm_matches_core_solver(fused):
         jnp.linalg.norm(x_dist - x_ref) / (jnp.linalg.norm(x_ref) + 1e-30)
     )
     assert rel <= 1e-5, f"fused={fused}: relative error {rel:.2e} > 1e-5"
+
+
+# ---------------------------------------------------------------------------
+# wire-compressed collectives (ISSUE 8): demoted transpose payloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rfft", [False, True])
+def test_fp32_wire_is_bit_exact_with_legacy_path(rfft):
+    """wire_dtype='fp32' short-circuits to the direct all_to_all — the
+    compiled program must be the legacy one, bit for bit."""
+    mesh = make_mesh((1,), ("model",))
+    _, C, _, _ = _problem()
+    x2d = layout_2d(jax.random.normal(jax.random.PRNGKey(31), (N,)), N1, N2)
+    if rfft:
+        spec = make_distributed_rfft(mesh, N1, N2)[0](layout_2d(C.col, N1, N2))
+    else:
+        spec = make_distributed_fft(mesh, N1, N2)[0](
+            layout_2d(C.col, N1, N2).astype(jnp.complex64)
+        )
+    mv = make_distributed_matvec(mesh, rfft=rfft)
+    mv32 = make_distributed_matvec(mesh, rfft=rfft, wire_dtype="fp32")
+    for transpose in (False, True):
+        np.testing.assert_array_equal(
+            np.asarray(mv32(spec, x2d, transpose)),
+            np.asarray(mv(spec, x2d, transpose)),
+        )
+
+
+@pytest.mark.parametrize("wire", ["bf16", "fp16"])
+@pytest.mark.parametrize("rfft", [False, True])
+def test_wire_matvec_within_guard_bound(rfft, wire):
+    """Demoted-wire matvecs stay within the plan layer's precision bound —
+    the quantity the plan() guard probes before accepting the plan."""
+    from repro.ops.plan import WIRE_ERROR_BOUND
+
+    mesh = make_mesh((1,), ("model",))
+    _, C, _, _ = _problem()
+    x2d = layout_2d(jax.random.normal(jax.random.PRNGKey(37), (N,)), N1, N2)
+    if rfft:
+        spec = make_distributed_rfft(mesh, N1, N2)[0](layout_2d(C.col, N1, N2))
+    else:
+        spec = make_distributed_fft(mesh, N1, N2)[0](
+            layout_2d(C.col, N1, N2).astype(jnp.complex64)
+        )
+    mv32 = make_distributed_matvec(mesh, rfft=rfft)
+    mvw = make_distributed_matvec(mesh, rfft=rfft, wire_dtype=wire)
+    for transpose in (False, True):
+        rel = _rel(mvw(spec, x2d, transpose), mv32(spec, x2d, transpose))
+        assert 0 < rel <= WIRE_ERROR_BOUND, (wire, rfft, transpose, rel)
+
+
+def test_bf16_wire_dist_cpadmm_within_guard_bound():
+    """End-to-end: the bf16-wire CPADMM solve lands within the documented
+    wire error bound of the fp32-wire solve (same seed, same iterates)."""
+    from repro.ops.plan import WIRE_ERROR_BOUND
+
+    x_true, C, omega, mask = _problem()
+    mesh = make_mesh((1,), ("model",))
+    spec_h = make_dist_spectrum(mesh, rfft=True)(layout_2d(C.col, N1, N2))
+    args = (
+        spec_h,
+        layout_2d(mask, N1, N2),
+        layout_2d(mask * C.matvec(x_true), N1, N2),
+        jnp.float32(ALPHA),
+        jnp.float32(RHO),
+        jnp.float32(SIGMA),
+    )
+    z32 = make_dist_cpadmm(mesh, N1, N2, ITERS, rfft=True)(*args)
+    zbf = make_dist_cpadmm(mesh, N1, N2, ITERS, rfft=True,
+                           wire_dtype="bf16")(*args)
+    rel = _rel(unlayout_2d(zbf), unlayout_2d(z32))
+    assert rel <= WIRE_ERROR_BOUND, f"bf16 wire: rel {rel:.2e}"

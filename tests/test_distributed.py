@@ -19,6 +19,7 @@ PROGS = [
     "compression_prog.py",
     "autotune_prog.py",
     "serve_prog.py",
+    "wire_prog.py",
 ]
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")

@@ -427,3 +427,86 @@ def test_make_dist_cpadmm_not_exported_from_dist_package():
     assert callable(dist.dist_cpadmm_step)
     assert set(dist.__all__) >= {"layout_2d", "make_distributed_rfft",
                                  "rules_for_arch", "DistCpadmmParams"}
+
+
+# ---------------------------------------------------------------------------
+# wire-compressed collectives (ISSUE 8): wire_dtype on the plan layer
+# ---------------------------------------------------------------------------
+
+
+def test_local_plan_rejects_wire_dtype_loudly():
+    """The single validation site refuses a demoted wire without a mesh —
+    a local plan has no all-to-all to compress, and silently ignoring the
+    knob would hide the 2x byte win the caller thinks they asked for."""
+    prob = _problem()
+    for wire in ("bf16", "fp16"):
+        with pytest.raises(ValueError, match="no wire to compress"):
+            plan(prob.op, wire_dtype=wire)
+    # the message teaches the fix: it lists the valid values
+    with pytest.raises(ValueError, match=r"valid values.*bf16.*fp16.*fp32"):
+        PlanConfig(wire_dtype="bf16").validate(distributed=False)
+
+
+def test_unknown_wire_dtype_lists_valid_values():
+    prob = _problem()
+    mesh = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match=r"wire_dtype must be one of.*bf16"):
+        plan(prob.op, mesh, wire_dtype="int8")
+    with pytest.raises(ValueError, match="wire_dtype must be one of"):
+        PlanConfig(wire_dtype="fp64").validate(distributed=True)
+
+
+def test_plan_config_describe_carries_wire_tag():
+    cfg32 = PlanConfig(rfft=True, n1=N1, n2=N2)
+    cfg16 = PlanConfig(rfft=True, n1=N1, n2=N2, wire_dtype="bf16")
+    assert "wire=" not in cfg32.describe()  # fp32 keeps legacy strings
+    assert "wire=bf16" in cfg16.describe()
+    # the tag splits serve buckets: describe() must differ
+    assert cfg32.describe() != cfg16.describe()
+
+
+def test_plan_bf16_wire_passes_guard_and_solves():
+    """bf16 wire survives the precision guard on a well-scaled operator and
+    the solver lands within the documented wire error bound of fp32."""
+    from repro.ops.plan import WIRE_ERROR_BOUND
+
+    prob = _problem()
+    mesh = make_mesh((1,), ("model",))
+    pl16 = plan(prob.op, mesh, n1=N1, n2=N2, wire_dtype="bf16")
+    assert pl16.wire_dtype == "bf16"
+    assert "wire=bf16" in pl16.config.describe()
+    pl32 = plan(prob.op, mesh, n1=N1, n2=N2)
+    kw = dict(iters=300, record_every=300, alpha=ALPHA, rho=RHO, sigma=SIGMA)
+    x32, _ = solve(prob, "cpadmm", plan=pl32, **kw)
+    x16, _ = solve(prob, "cpadmm", plan=pl16, **kw)
+    assert _rel(x16, x32) <= WIRE_ERROR_BOUND
+
+
+def test_wire_dtype_config_and_legacy_kwarg_agree():
+    prob = _problem()
+    mesh = make_mesh((1,), ("model",))
+    cfg = PlanConfig(n1=N1, n2=N2, wire_dtype="bf16")
+    via_cfg = plan(prob.op, mesh, config=cfg)
+    via_kw = plan(prob.op, mesh, n1=N1, n2=N2, wire_dtype="bf16")
+    assert via_cfg.config == via_kw.config == cfg
+
+
+def test_fp16_wire_overflow_triggers_fp32_fallback():
+    """ISSUE 8 acceptance: fp16 must either meet the bound or demonstrably
+    fall back.  A spectrum scaled past float16's 65504 max overflows the
+    inverse-transpose payload, the probe error goes non-finite, and the
+    guard demotes the plan to the fp32 wire with a RuntimeWarning."""
+    from repro.core.circulant import Circulant
+
+    prob = _problem()
+    big = Circulant.from_first_col(prob.op.circ.col * 1e9)
+    op_big = PartialCirculant(big, prob.op.omega)
+    mesh = make_mesh((1,), ("model",))
+    with pytest.warns(RuntimeWarning, match="failed the precision guard"):
+        pl = plan(op_big, mesh, n1=N1, n2=N2, wire_dtype="fp16")
+    assert pl.wire_dtype == "fp32"  # error-controlled: never silently wrong
+    # the fallback plan is the fp32 twin, numerically identical to asking
+    # for fp32 outright
+    x = jax.random.normal(jax.random.PRNGKey(9), (N,))
+    ref = plan(op_big, mesh, n1=N1, n2=N2).matvec(x)
+    np.testing.assert_array_equal(np.asarray(pl.matvec(x)), np.asarray(ref))

@@ -224,3 +224,83 @@ def test_summarize_reports_throughput_and_percentiles():
     assert s["signals_per_sec"] > 0
     assert 0 <= s["p50_latency_s"] <= s["p99_latency_s"]
     assert summarize([]) == {"count": 0}
+
+
+def test_wire_dtype_splits_buckets():
+    """bf16-wire and fp32-wire requests must never share a lane: describe()
+    carries the wire tag, so the bucket keys differ on that knob alone."""
+    op = _op()
+    base = _workload(op, 1)[0]
+    cfg32 = PlanConfig(rfft=True, n1=8, n2=16)
+    cfg16 = PlanConfig(rfft=True, n1=8, n2=16, wire_dtype="bf16")
+    srv = _server()
+    k32 = srv.bucket_key(dataclasses.replace(base, plan_config=cfg32))
+    k16 = srv.bucket_key(dataclasses.replace(base, plan_config=cfg16))
+    assert k32 != k16
+    assert "wire=bf16" in k16 and "wire=" not in k32
+
+
+def test_recycled_slots_with_bf16_wire_bucket_isolated():
+    """A mixed fp32/bf16-wire stream splits into two engines and recycling
+    happens inside each lane.  The fp32 lane keeps the exact 1e-5
+    recycled-slot parity contract with its solo same-plan solve.  The bf16
+    lane is parity *within the wire bound*: batched and solo programs
+    differ by fp32-ulp scheduling noise, and the bf16 wire re-rounds those
+    slightly different payloads, so trajectories may part by ~one wire ulp
+    per transpose — bounded by the plan layer's guard, never silent
+    corruption."""
+    from repro.dist.compat import make_mesh
+    from repro.ops.plan import WIRE_ERROR_BOUND
+
+    op = _op()
+    mesh = make_mesh((1,), ("model",))
+    cfg32 = PlanConfig(rfft=True, n1=8, n2=16)
+    cfg16 = PlanConfig(rfft=True, n1=8, n2=16, wire_dtype="bf16")
+    reqs = []
+    for tag, cfg in (("w32", cfg32), ("w16", cfg16)):
+        for r in _workload(op, 3, tols=(1e-3,)):
+            reqs.append(dataclasses.replace(
+                r, request_id=f"{tag}-{r.request_id}", plan_config=cfg))
+    srv = _server(mesh=mesh)
+    results = srv.serve(reqs)
+    assert len(results) == 6
+    stats = srv.stats()
+    assert stats["buckets"] == 2
+    # 3 requests through 2 slots per lane: at least one recycle each
+    assert all(s["recycled"] >= 1 for s in stats["per_bucket"].values())
+    # recycled-lane parity per bucket: each result matches the solo
+    # solve_until run *under the same plan* (the engine computes identical
+    # iterates whichever slot/round admitted it); across plans, the bf16
+    # result stays within the wire precision bound of the fp32 one
+    from repro.ops import plan as plan_fn
+
+    plans = {"w32": plan_fn(op, mesh, config=cfg32),
+             "w16": plan_fn(op, mesh, config=cfg16)}
+    assert plans["w16"].wire_dtype == "bf16"  # guard accepted the wire
+    by_id = {r.request_id: r for r in reqs}
+    solo = {}
+    for res in results:
+        req = by_id[res.request_id]
+        lane = res.request_id.split("-")[0]
+        x_solo, used = solve_until(
+            RecoveryProblem(op=op, y=req.y), "cpadmm", tol=req.tol,
+            max_iters=req.max_iters, min_iters=req.min_iters,
+            rho=RHO, sigma=RHO, plan=plans[lane],
+        )
+        solo[res.request_id] = np.asarray(res.x)
+        x_solo = np.asarray(x_solo)
+        rel = np.linalg.norm(res.x - x_solo) / (np.linalg.norm(x_solo) + 1e-12)
+        if lane == "w32":
+            assert rel <= 1e-5, (res.request_id, rel)
+            assert res.iterations == int(used), res.request_id
+        else:
+            assert rel <= 2 * WIRE_ERROR_BOUND, (res.request_id, rel)
+        assert res.converged, res.request_id
+    # across lanes: the bf16 answer deviates from the fp32 one by wire
+    # noise (compounded over the solve), not by silent corruption
+    for rid16, x16 in solo.items():
+        if not rid16.startswith("w16"):
+            continue
+        x32 = solo["w32" + rid16[len("w16"):]]
+        rel = np.linalg.norm(x16 - x32) / (np.linalg.norm(x32) + 1e-12)
+        assert 0 < rel <= 2 * WIRE_ERROR_BOUND, (rid16, rel)

@@ -205,7 +205,12 @@ def test_measure_mode_plan_solves_correctly(cache):
                        alpha=1e-4, rho=0.01, sigma=0.01, plan=pl)
     rel = float(jnp.linalg.norm(x_tuned - x_ref)
                 / (jnp.linalg.norm(x_ref) + 1e-30))
-    assert rel <= 1e-5, rel
+    # re-knobbing is exact; a demoted wire (the timer may pick bf16) is
+    # bounded by the plan layer's precision guard instead
+    from repro.ops.plan import WIRE_ERROR_BOUND
+
+    tol = 1e-5 if pl.wire_dtype == "fp32" else WIRE_ERROR_BOUND
+    assert rel <= tol, (rel, pl.config.describe())
     # the cached winner rebuilds the identical plan config
     pl2 = plan(prob.op, mesh, tune="measure", batch=2,
                tune_opts={"cache": cache})
@@ -296,3 +301,42 @@ def test_missing_cache_file_is_silently_empty(tmp_path):
     with _w.catch_warnings():
         _w.simplefilter("error")
         assert cache.entries() == {}
+
+
+def test_candidate_configs_sweep_wire_dtypes():
+    """The free candidate space sweeps fp32 + bf16 wires (fp16 is opt-in
+    via a pin — range-fragile), and a wire_dtype pin collapses the sweep."""
+    op = _problem().op
+    mesh = make_mesh((1,), ("model",))
+    free = tune.candidate_configs(op, mesh)
+    assert {c.wire_dtype for c in free} == {"fp32", "bf16"}
+    pinned = tune.candidate_configs(op, mesh, pins={"wire_dtype": "fp32"})
+    assert {c.wire_dtype for c in pinned} == {"fp32"}
+    fp16 = tune.candidate_configs(op, mesh, pins={"wire_dtype": "fp16"})
+    assert {c.wire_dtype for c in fp16} == {"fp16"}
+
+
+def test_group_key_splits_on_wire_dtype():
+    """Wire dtype changes the collective payload program, so candidates
+    with different wires must never share a lowering/compile group."""
+    a = PlanConfig(rfft=True, overlap=1, n1=8, n2=8)
+    w = dataclasses.replace(a, wire_dtype="bf16")
+    assert tune._group_key(a) != tune._group_key(w)
+    assert tune._group_key(w) == tune._group_key(
+        dataclasses.replace(w, overlap=4))
+
+
+def test_one_device_tie_breaks_to_fp32_wire():
+    """On a 1-device axis collectives vanish, so every wire models the same
+    cost — the tie must break toward the exact fp32 default rather than
+    buying bf16 rounding for nothing.  (The real bf16-under-fp32 byte
+    ranking needs a multi-device mesh: tests/dist_progs/autotune_prog.py
+    and wire_prog.py assert it on compiled 8-device HLO.)"""
+    mesh = make_mesh((1,), ("model",))
+    cands = [
+        PlanConfig(rfft=True, n1=N1, n2=N2, wire_dtype=w)
+        for w in ("bf16", "fp32")
+    ]
+    scored = tune.score_candidates(mesh, cands, batch=1, iters=2)
+    assert scored[0][1].wire_dtype == "fp32"
+    assert tune.COUNTERS["scored"] == 2  # wire splits the compile group
