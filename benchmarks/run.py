@@ -33,6 +33,7 @@ SUITE_NAMES = (
     "autotune",  # beyond-paper: cost-model plan autotuner vs hand-picked
     "serve",  # beyond-paper: continuous-batching dispatcher vs static batch
     "wire",  # beyond-paper: wire-compressed collective precision sweep
+    "hier",  # beyond-paper: hierarchical two-stage transpose, per-tier bytes
 )
 
 

@@ -48,3 +48,18 @@ def make_mesh(axis_shapes, axis_names):
             axis_shapes, axis_names, axis_types=(AxisType.Auto,) * len(axis_names)
         )
     return jax.make_mesh(axis_shapes, axis_names)
+
+
+def make_hier_mesh(data: int, host: int, device: int):
+    """``data x host x device`` mesh for the hierarchical two-stage transpose.
+
+    The transform axis of ``repro.dist.fft`` factors over the
+    ``("host", "device")`` pair (p = host * device, device-major sharding —
+    see ``fft.shard_axes``); a leading batch of signals shards over
+    ``"data"`` exactly as on a flat mesh.  Axis order follows jax's
+    convention that later mesh axes are nearer neighbors: the device tier
+    (fast ICI) is innermost, hosts (slow DCN) outside it, so the
+    ``host * device`` consecutive devices of one data slice group into
+    ``host`` contiguous fast-tier islands.
+    """
+    return make_mesh((data, host, device), ("data", "host", "device"))

@@ -87,6 +87,38 @@ so quantization error enters exactly once per collective and never
 compounds across the K overlap chunks; ``wire_dtype='fp32'`` is the
 bit-exact legacy path (no pack at all).  The plan layer guards the lossy
 dtypes with an error-controlled fp32 fallback (repro.ops.plan).
+
+Hierarchical two-stage transpose (``axis_name=(host, device)``, ``hier=``)
+--------------------------------------------------------------------------
+On a multi-host mesh the transform axis factors as p = H x D over a
+``(host, device)`` mesh-axis pair (``repro.dist.compat.make_hier_mesh``):
+the slow DCN links sit between hosts, the fast ICI tier within one.  A flat
+all-to-all over the factored axis (``hier=False``) pushes the *entire*
+block through the host boundary; the two-stage exchange (``hier=True``)
+restructures the same permutation so only the cross-boundary fraction ever
+touches DCN:
+
+    1. intra-host all-to-all over the device tier (full block bytes, fast
+       ICI only),
+    2. a purely local reshuffle ordering the received sub-blocks by their
+       absolute source rank, and
+    3. H-1 rotation ``ppermute`` hops over the host tier, each carrying
+       exactly 1/H of the flat payload — the sub-block destined for the
+       local host never enters a collective at all.
+
+Total inter-host bytes are (H-1)/H of the flat collective's (1/2 at H=2),
+and the result is bit-identical to the flat exchange — the two stages
+compose the same global permutation, so every downstream consumer (overlap
+chunk gathering, rfft padding, the solver steps) is unchanged.  The
+transform axis is sharded *device-major* (``P((device, host))``: device
+(h, d) holds global block r = d*H + h), which is what makes the
+intra-host-first ordering correct; :func:`shard_axes` owns that convention.
+
+Per-tier wire precision: ``wire_dtype`` demotes the intra-host all-to-all
+payloads exactly as on a flat mesh, and the new ``inter_wire_dtype``
+independently demotes the DCN ``ppermute`` hops (e.g. fp32 intra + bf16
+inter halves exactly the bytes on the slow tier).  Both default to the
+bit-exact ``'fp32'``.
 """
 
 from __future__ import annotations
@@ -114,6 +146,39 @@ from .compat import shard_map
 Array = jax.Array
 
 MODEL_AXIS = "model"  # default mesh axis the signal is sharded over
+HOST_AXIS = "host"  # slow-tier (DCN) axis of a hierarchical mesh
+DEVICE_AXIS = "device"  # fast-tier (ICI) axis of a hierarchical mesh
+
+# ``axis_name`` across this module is either one mesh-axis name (flat
+# transform axis) or a ``(host_axis, device_axis)`` pair (factored
+# hierarchical axis, p = H x D).
+
+
+def shard_axes(axis_name):
+    """Mesh axes the transform dimension shards over, major axis first.
+
+    The hierarchical ``(host, device)`` pair shards *device-major* (device
+    (h, d) holds global block ``r = d*H + h``): that is the order in which
+    an intra-host all-to-all is the correct first stage of the two-stage
+    transpose, and the order a flat ``lax.all_to_all`` over the pair must
+    use to produce the same result as a single fused axis.
+    """
+    if isinstance(axis_name, str):
+        return axis_name
+    host, dev = axis_name
+    return (dev, host)
+
+
+def _axis_size(axis_name) -> int:
+    return lax.psum(1, shard_axes(axis_name))
+
+
+def _axis_rank(axis_name):
+    """Global rank of this shard on the (possibly factored) transform axis."""
+    if isinstance(axis_name, str):
+        return lax.axis_index(axis_name)
+    host, dev = axis_name
+    return lax.axis_index(dev) * lax.psum(1, host) + lax.axis_index(host)
 
 
 # --------------------------------------------------------------------------
@@ -205,8 +270,105 @@ def _wire_all_to_all(
     return unpack_wire(w, t.dtype)
 
 
+def _wire_ppermute(t: Array, axis_name: str, perm, wire_dtype: str) -> Array:
+    """One inter-host ``ppermute`` hop with the payload demoted to the wire
+    dtype — the ppermute twin of :func:`_wire_all_to_all` (same split-complex
+    pack, same uint16 bitcast so the 2-byte wire survives XLA:CPU float
+    normalization; ``'fp32'`` is the bit-exact direct send)."""
+    if wire_dtype == "fp32":
+        return lax.ppermute(t, axis_name, perm)
+    w = pack_wire(t, wire_dtype)
+    u = lax.bitcast_convert_type(w, jnp.uint16)
+    u = lax.ppermute(u, axis_name, perm)
+    w = lax.bitcast_convert_type(u, WIRE_DTYPES[wire_dtype])
+    return unpack_wire(w, t.dtype)
+
+
+def _hier_reorder(pieces, h):
+    """Order received hop pieces by absolute source host and stack them.
+
+    ``pieces[k]`` came from host ``(h - k) % H`` (k = 0 is the local
+    sub-block).  A static flip (``R'[j] = R[(-j) % H]``) followed by a roll
+    by the traced host index ``h`` yields source-host order — jnp.roll is
+    the one reindexing primitive that takes a traced shift.
+    """
+    st = jnp.stack(pieces, axis=-3)  # (..., H (hop k), rows, cols)
+    flip = jnp.concatenate([st[..., :1, :, :], st[..., :0:-1, :, :]], axis=-3)
+    return jnp.roll(flip, h, axis=-3)  # (..., H (source host h'), rows, cols)
+
+
+def _hier_fwd_exchange(
+    t: Array, axis_name, wire_dtype: str, inter_wire_dtype: str
+) -> Array:
+    """Two-stage forward transpose: (..., cs, W) -> (..., p*cs, W/p), equal
+    bit-for-bit (at fp32 wires) to the flat all-to-all over the factored
+    axis.  Stage 1 is a full intra-host all-to-all on the device tier;
+    stage 2 sends only the H-1 cross-host sub-blocks, each 1/H of the flat
+    payload, as rotation ppermutes on the host tier (module docstring)."""
+    host, dev = axis_name
+    H = lax.psum(1, host)
+    D = lax.psum(1, dev)
+    h = lax.axis_index(host)
+    a = _wire_all_to_all(t, dev, 1, 2, wire_dtype)  # (..., D*cs, W/D)
+    wsub = a.shape[-1] // H
+    # the sub-block staying on this host is sliced out locally — never wired
+    pieces = [lax.dynamic_slice_in_dim(a, h * wsub, wsub, axis=-1)]
+    for k in range(1, H):
+        send = lax.dynamic_slice_in_dim(a, ((h + k) % H) * wsub, wsub, axis=-1)
+        perm = [(s, (s + k) % H) for s in range(H)]
+        pieces.append(_wire_ppermute(send, host, perm, inter_wire_dtype))
+    T = _hier_reorder(pieces, h)  # (..., H, D*cs, wsub)
+    Dcs, w = T.shape[-2], T.shape[-1]
+    cs = Dcs // D
+    T = T.reshape(T.shape[:-3] + (H, D, cs, w))
+    T = jnp.swapaxes(T, -4, -3)  # (..., D, H, cs, w): flat rank r = d*H + h
+    return T.reshape(T.shape[:-4] + (D * H * cs, w))
+
+
+def _hier_inv_exchange(
+    t: Array, axis_name, wire_dtype: str, inter_wire_dtype: str
+) -> Array:
+    """Two-stage inverse transpose: (..., n1, cs) -> (..., n1/p, p*cs); the
+    mirror of :func:`_hier_fwd_exchange` with the roles of the split and
+    concat axes swapped (rows cross the wire, columns concatenate)."""
+    host, dev = axis_name
+    H = lax.psum(1, host)
+    D = lax.psum(1, dev)
+    h = lax.axis_index(host)
+    a = _wire_all_to_all(t, dev, 2, 1, wire_dtype)  # (..., n1/D, D*cs)
+    rsub = a.shape[-2] // H
+    pieces = [lax.dynamic_slice_in_dim(a, h * rsub, rsub, axis=-2)]
+    for k in range(1, H):
+        send = lax.dynamic_slice_in_dim(a, ((h + k) % H) * rsub, rsub, axis=-2)
+        perm = [(s, (s + k) % H) for s in range(H)]
+        pieces.append(_wire_ppermute(send, host, perm, inter_wire_dtype))
+    T = _hier_reorder(pieces, h)  # (..., H, n1/p, D*cs)
+    r, Dcs = T.shape[-2], T.shape[-1]
+    cs = Dcs // D
+    T = T.reshape(T.shape[:-1] + (D, cs))  # (..., H, r, D, cs)
+    T = jnp.moveaxis(T, -4, -2)  # (..., r, D, H, cs): columns rank-ordered
+    return T.reshape(T.shape[:-3] + (D * H * cs,))
+
+
+def _fwd_exchange(
+    t: Array, axis_name, wire_dtype: str, hier: bool, inter_wire_dtype: str
+) -> Array:
+    if hier and not isinstance(axis_name, str):
+        return _hier_fwd_exchange(t, axis_name, wire_dtype, inter_wire_dtype)
+    return _wire_all_to_all(t, shard_axes(axis_name), 1, 2, wire_dtype)
+
+
+def _inv_exchange(
+    t: Array, axis_name, wire_dtype: str, hier: bool, inter_wire_dtype: str
+) -> Array:
+    if hier and not isinstance(axis_name, str):
+        return _hier_inv_exchange(t, axis_name, wire_dtype, inter_wire_dtype)
+    return _wire_all_to_all(t, shard_axes(axis_name), 2, 1, wire_dtype)
+
+
 def _fwd_transpose(
-    stage1, a: Array, overlap: int, axis_name: str, wire_dtype: str = "fp32"
+    stage1, a: Array, overlap: int, axis_name: str, wire_dtype: str = "fp32",
+    hier: bool = False, inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Chunked forward transpose-collective with the row axis (-2) chunked.
 
@@ -221,14 +383,16 @@ def _fwd_transpose(
     n1_loc = a.shape[-2]
     if overlap <= 1:
         b = stage1(a, 0)
-        return _wire_all_to_all(b, axis_name, 1, 2, wire_dtype)
-    p = lax.psum(1, axis_name)
+        return _fwd_exchange(b, axis_name, wire_dtype, hier, inter_wire_dtype)
+    p = _axis_size(axis_name)
     cs, nch = _chunk_grid(n1_loc, overlap)
     outs = []
     for i in range(nch):
         chunk = _pad_to(a[..., i * cs : min((i + 1) * cs, n1_loc), :], cs, -2)
         t = stage1(chunk, i * cs)  # pad rows are zero; twiddle keeps them zero
-        outs.append(_wire_all_to_all(t, axis_name, 1, 2, wire_dtype))
+        outs.append(
+            _fwd_exchange(t, axis_name, wire_dtype, hier, inter_wire_dtype)
+        )
     return _gather_fwd_chunks(outs, p, cs, n1_loc)
 
 
@@ -250,7 +414,8 @@ def _gather_fwd_chunks(outs, p: int, cs: int, n1_loc: int) -> Array:
 
 
 def _inv_transpose(
-    stage1, F: Array, overlap: int, axis_name: str, wire_dtype: str = "fp32"
+    stage1, F: Array, overlap: int, axis_name: str, wire_dtype: str = "fp32",
+    hier: bool = False, inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Chunked inverse transpose-collective with the column axis (-1) chunked.
 
@@ -263,14 +428,16 @@ def _inv_transpose(
     c_loc = F.shape[-1]
     if overlap <= 1:
         b = stage1(F, 0)
-        return _wire_all_to_all(b, axis_name, 2, 1, wire_dtype)
-    p = lax.psum(1, axis_name)
+        return _inv_exchange(b, axis_name, wire_dtype, hier, inter_wire_dtype)
+    p = _axis_size(axis_name)
     cs, nch = _chunk_grid(c_loc, overlap)
     outs = []
     for i in range(nch):
         chunk = _pad_to(F[..., :, i * cs : min((i + 1) * cs, c_loc)], cs, -1)
         t = stage1(chunk, i * cs)  # pad columns are zero and stay zero
-        outs.append(_wire_all_to_all(t, axis_name, 2, 1, wire_dtype))
+        outs.append(
+            _inv_exchange(t, axis_name, wire_dtype, hier, inter_wire_dtype)
+        )
     return _gather_inv_chunks(outs, p, cs, c_loc)
 
 
@@ -291,18 +458,22 @@ def _gather_inv_chunks(outs, p: int, cs: int, c_loc: int) -> Array:
 
 def fft2_local(
     a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1,
-    wire_dtype: str = "fp32",
+    wire_dtype: str = "fp32", hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Forward four-step FFT of a row-sharded block.
 
-    a: (..., n1/p, n2) complex, rows j1 sharded over ``axis_name``.
+    a: (..., n1/p, n2) complex, rows j1 sharded over ``axis_name`` (one mesh
+    axis, or a (host, device) pair — device-major, see :func:`shard_axes`).
     Returns (..., n1, n2/p): the column-sharded spectrum block.
     ``overlap=K`` cuts the rows into K chunks whose transpose-collectives
     overlap the first-stage FFT+twiddle (numerically identical output).
-    ``wire_dtype`` demotes the collective payload (module docstring).
+    ``wire_dtype`` demotes the collective payload; ``hier=True`` runs the
+    two-stage hierarchical transpose with ``inter_wire_dtype`` on the
+    inter-host hops (module docstring).
     """
-    p = lax.psum(1, axis_name)
-    idx = lax.axis_index(axis_name)
+    p = _axis_size(axis_name)
+    idx = _axis_rank(axis_name)
     n1_loc, n2 = a.shape[-2], a.shape[-1]
     n = n1_loc * p * n2
 
@@ -312,22 +483,26 @@ def fft2_local(
         k2 = jnp.arange(n2)
         return b * _phase(j1[:, None] * k2[None, :], n)
 
-    b = _fwd_transpose(stage1, a, overlap, axis_name, wire_dtype)
+    b = _fwd_transpose(
+        stage1, a, overlap, axis_name, wire_dtype, hier, inter_wire_dtype
+    )
     return jnp.fft.fft(b, axis=-2)  # over j1 (full after the transpose)
 
 
 def ifft2_local(
     F: Array, axis_name: str = MODEL_AXIS, overlap: int = 1,
-    wire_dtype: str = "fp32",
+    wire_dtype: str = "fp32", hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Inverse four-step FFT of a column-sharded spectrum block.
 
     F: (..., n1, n2/p) complex, columns k2 sharded over ``axis_name``.
     Returns (..., n1/p, n2): the row-sharded time-domain block (complex;
     take the real part for real signals).  ``overlap=K`` chunks the columns.
+    ``hier``/``inter_wire_dtype`` as in :func:`fft2_local`.
     """
-    p = lax.psum(1, axis_name)
-    idx = lax.axis_index(axis_name)
+    p = _axis_size(axis_name)
+    idx = _axis_rank(axis_name)
     n1, n2_loc = F.shape[-2], F.shape[-1]
     n = n1 * n2_loc * p
 
@@ -337,23 +512,27 @@ def ifft2_local(
         k2 = idx * n2_loc + c0 + jnp.arange(chunk.shape[-1])  # global columns
         return b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
 
-    b = _inv_transpose(stage1, F, overlap, axis_name, wire_dtype)
+    b = _inv_transpose(
+        stage1, F, overlap, axis_name, wire_dtype, hier, inter_wire_dtype
+    )
     return jnp.fft.ifft(b, axis=-1)  # over k2 (full after the transpose)
 
 
 def rfft2_local(
     a: Array, axis_name: str = MODEL_AXIS, overlap: int = 1,
-    wire_dtype: str = "fp32",
+    wire_dtype: str = "fp32", hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Forward four-step rfft of a row-sharded *real* block.
 
     a: (..., n1/p, n2) real, rows j1 sharded over ``axis_name``.
     Returns (..., n1, pad(nf)/p) complex: the column-sharded half spectrum
     (kept columns k2 in [0, n2//2], zero-padded to a multiple of p).
-    ``overlap=K`` chunks the rows as in :func:`fft2_local`.
+    ``overlap=K`` chunks the rows as in :func:`fft2_local`;
+    ``hier``/``inter_wire_dtype`` select the two-stage transpose likewise.
     """
-    p = lax.psum(1, axis_name)
-    idx = lax.axis_index(axis_name)
+    p = _axis_size(axis_name)
+    idx = _axis_rank(axis_name)
     n1_loc, n2 = a.shape[-2], a.shape[-1]
     n = n1_loc * p * n2
     nf, nf_pad = rfft_len(n2), padded_rfft_len(n2, p)
@@ -366,13 +545,16 @@ def rfft2_local(
         return _pad_to(b, nf_pad, -1)
 
     # transpose-collective on half as many columns: half the wire bytes
-    b = _fwd_transpose(stage1, a, overlap, axis_name, wire_dtype)
+    b = _fwd_transpose(
+        stage1, a, overlap, axis_name, wire_dtype, hier, inter_wire_dtype
+    )
     return jnp.fft.fft(b, axis=-2)  # over j1, on half as many columns
 
 
 def irfft2_local(
     F: Array, n2: int, axis_name: str = MODEL_AXIS, overlap: int = 1,
-    wire_dtype: str = "fp32",
+    wire_dtype: str = "fp32", hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Inverse four-step rfft of a column-sharded half-spectrum block.
 
@@ -381,7 +563,7 @@ def irfft2_local(
     not recoverable from the half-spectrum shape).  Returns the row-sharded
     *real* block (..., n1/p, n2).  ``overlap=K`` chunks the kept columns.
     """
-    idx = lax.axis_index(axis_name)
+    idx = _axis_rank(axis_name)
     n1, nfp_loc = F.shape[-2], F.shape[-1]
     n = n1 * n2
     nf = rfft_len(n2)
@@ -392,7 +574,9 @@ def irfft2_local(
         k2 = idx * nfp_loc + c0 + jnp.arange(chunk.shape[-1])  # global columns
         return b * _phase(-(j1[:, None] * k2[None, :]), n)  # conjugate twiddle
 
-    b = _inv_transpose(stage1, F, overlap, axis_name, wire_dtype)
+    b = _inv_transpose(
+        stage1, F, overlap, axis_name, wire_dtype, hier, inter_wire_dtype
+    )
     return jnp.fft.irfft(b[..., :nf], n=n2, axis=-1)  # drop pad, real out
 
 
@@ -403,6 +587,8 @@ def matvec_local(
     transpose: bool = False,
     overlap: int = 1,
     wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Sharded circulant matvec on local blocks: irfft(spec * fft(x)).
 
@@ -410,9 +596,14 @@ def matvec_local(
     the circulant's first column.  x: row-sharded real block (..., n1/p, n2).
     ``transpose=True`` applies C^T (conjugate spectrum, real circulant).
     """
-    f = fft2_local(x.astype(spec.dtype), axis_name, overlap, wire_dtype)
+    f = fft2_local(
+        x.astype(spec.dtype), axis_name, overlap, wire_dtype, hier,
+        inter_wire_dtype,
+    )
     s = jnp.conj(spec) if transpose else spec
-    return jnp.real(ifft2_local(s * f, axis_name, overlap, wire_dtype))
+    return jnp.real(ifft2_local(
+        s * f, axis_name, overlap, wire_dtype, hier, inter_wire_dtype
+    ))
 
 
 def rmatvec_local(
@@ -422,6 +613,8 @@ def rmatvec_local(
     transpose: bool = False,
     overlap: int = 1,
     wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Array:
     """Half-spectrum circulant matvec: same contract as :func:`matvec_local`
     with ``spec_h`` the column-sharded *half* spectrum from rfft2_local.
@@ -431,9 +624,11 @@ def rmatvec_local(
     under the multiply and the inverse transform returns the real result.
     """
     n2 = x.shape[-1]
-    f = rfft2_local(x, axis_name, overlap, wire_dtype)
+    f = rfft2_local(x, axis_name, overlap, wire_dtype, hier, inter_wire_dtype)
     s = jnp.conj(spec_h) if transpose else spec_h
-    return irfft2_local(s * f, n2, axis_name, overlap, wire_dtype)
+    return irfft2_local(
+        s * f, n2, axis_name, overlap, wire_dtype, hier, inter_wire_dtype
+    )
 
 
 # --------------------------------------------------------------------------
@@ -441,28 +636,34 @@ def rmatvec_local(
 # --------------------------------------------------------------------------
 
 
-def row_spec(axis_name: str = MODEL_AXIS, batch_axis: str | None = None) -> P:
+def row_spec(axis_name=MODEL_AXIS, batch_axis: str | None = None) -> P:
     """Signal-domain spec; with ``batch_axis`` the arrays carry a leading
-    batch dimension sharded over the mesh's data axis."""
+    batch dimension sharded over the mesh's data axis.  A (host, device)
+    ``axis_name`` shards the row axis over both tiers device-major
+    (:func:`shard_axes`)."""
+    ax = shard_axes(axis_name)
     if batch_axis is not None:
-        return P(batch_axis, axis_name, None)
-    return P(axis_name, None)
+        return P(batch_axis, ax, None)
+    return P(ax, None)
 
 
-def col_spec(axis_name: str = MODEL_AXIS, batch_axis: str | None = None) -> P:
+def col_spec(axis_name=MODEL_AXIS, batch_axis: str | None = None) -> P:
+    ax = shard_axes(axis_name)
     if batch_axis is not None:
-        return P(batch_axis, None, axis_name)
-    return P(None, axis_name)
+        return P(batch_axis, None, ax)
+    return P(None, ax)
 
 
 def make_distributed_fft(
     mesh,
     n1: int,
     n2: int,
-    axis_name: str = MODEL_AXIS,
+    axis_name=MODEL_AXIS,
     batch_axis: str | None = None,
     overlap: int = 1,
     wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
     """(fft2d, ifft2d) over global (n1, n2) arrays on ``mesh``.
 
@@ -473,7 +674,9 @@ def make_distributed_fft(
     With ``batch_axis`` the arrays are
     (B, n1, n2) with B sharded over that mesh axis — the whole batch shares
     the one collective.  ``wire_dtype`` demotes the collective payload
-    (module docstring; 'fp32' is bit-exact).
+    (module docstring; 'fp32' is bit-exact).  A (host, device) ``axis_name``
+    with ``hier=True`` runs the two-stage hierarchical transpose;
+    ``inter_wire_dtype`` demotes only its DCN hops.
     """
     del n1, n2  # shapes are taken from the traced operands
 
@@ -481,7 +684,8 @@ def make_distributed_fft(
         shard_map(
             functools.partial(
                 fft2_local, axis_name=axis_name, overlap=overlap,
-                wire_dtype=wire_dtype,
+                wire_dtype=wire_dtype, hier=hier,
+                inter_wire_dtype=inter_wire_dtype,
             ),
             mesh=mesh,
             in_specs=(row_spec(axis_name, batch_axis),),
@@ -493,7 +697,8 @@ def make_distributed_fft(
         shard_map(
             functools.partial(
                 ifft2_local, axis_name=axis_name, overlap=overlap,
-                wire_dtype=wire_dtype,
+                wire_dtype=wire_dtype, hier=hier,
+                inter_wire_dtype=inter_wire_dtype,
             ),
             mesh=mesh,
             in_specs=(col_spec(axis_name, batch_axis),),
@@ -508,10 +713,12 @@ def make_distributed_rfft(
     mesh,
     n1: int,
     n2: int,
-    axis_name: str = MODEL_AXIS,
+    axis_name=MODEL_AXIS,
     batch_axis: str | None = None,
     overlap: int = 1,
     wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> Tuple[Callable[[Array], Array], Callable[[Array], Array]]:
     """(rfft2d, irfft2d): half-spectrum transforms over real (n1, n2) arrays.
 
@@ -520,7 +727,9 @@ def make_distributed_rfft(
     the real signal layout.  Same single all-to-all as the full path, at
     half the wire bytes and half the local FFT flops; ``overlap=K`` chunks
     that collective to overlap it with the first FFT stage, ``wire_dtype``
-    demotes its payload for another ~2x byte cut.
+    demotes its payload for another ~2x byte cut.  ``hier=True`` (with a
+    (host, device) ``axis_name``) runs the two-stage transpose with
+    ``inter_wire_dtype`` on the inter-host hops.
     """
     del n1  # taken from the traced operands; n2 is needed by the inverse
 
@@ -528,7 +737,8 @@ def make_distributed_rfft(
         shard_map(
             functools.partial(
                 rfft2_local, axis_name=axis_name, overlap=overlap,
-                wire_dtype=wire_dtype,
+                wire_dtype=wire_dtype, hier=hier,
+                inter_wire_dtype=inter_wire_dtype,
             ),
             mesh=mesh,
             in_specs=(row_spec(axis_name, batch_axis),),
@@ -540,7 +750,8 @@ def make_distributed_rfft(
         shard_map(
             functools.partial(
                 irfft2_local, n2=n2, axis_name=axis_name, overlap=overlap,
-                wire_dtype=wire_dtype,
+                wire_dtype=wire_dtype, hier=hier,
+                inter_wire_dtype=inter_wire_dtype,
             ),
             mesh=mesh,
             in_specs=(col_spec(axis_name, batch_axis),),
@@ -553,11 +764,13 @@ def make_distributed_rfft(
 
 def make_distributed_matvec(
     mesh,
-    axis_name: str = MODEL_AXIS,
+    axis_name=MODEL_AXIS,
     rfft: bool = False,
     batch_axis: str | None = None,
     overlap: int = 1,
     wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ):
     """Jitted ``mv(spec2d, x2d, transpose=False)`` over global arrays.
 
@@ -577,7 +790,8 @@ def make_distributed_matvec(
         fn = shard_map(
             functools.partial(
                 local, axis_name=axis_name, transpose=transpose,
-                overlap=overlap, wire_dtype=wire_dtype,
+                overlap=overlap, wire_dtype=wire_dtype, hier=hier,
+                inter_wire_dtype=inter_wire_dtype,
             ),
             mesh=mesh,
             in_specs=(col_spec(axis_name), row_spec(axis_name, batch_axis)),

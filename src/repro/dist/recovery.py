@@ -93,7 +93,8 @@ Array = jax.Array
 
 def _transforms(
     rfft: bool, n2: int, cdtype, axis_name: str, overlap: int = 1,
-    wire_dtype: str = "fp32",
+    wire_dtype: str = "fp32", hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ):
     """(forward, inverse) local transform pair: real block <-> spectrum block.
 
@@ -103,13 +104,25 @@ def _transforms(
     ``overlap`` selects the chunked overlapped transpose in both directions;
     ``wire_dtype`` demotes each transpose's all-to-all payload on the wire
     (twiddles and accumulation stay fp32 locally — repro.dist.fft).
+    ``hier`` (with a (host, device) ``axis_name``) runs each transpose as
+    the two-stage hierarchical exchange, ``inter_wire_dtype`` demoting only
+    its inter-host hops.
     """
     if rfft:
-        fwd = lambda r: rfft2_local(r, axis_name, overlap, wire_dtype)
-        inv = lambda F: irfft2_local(F, n2, axis_name, overlap, wire_dtype)
+        fwd = lambda r: rfft2_local(
+            r, axis_name, overlap, wire_dtype, hier, inter_wire_dtype
+        )
+        inv = lambda F: irfft2_local(
+            F, n2, axis_name, overlap, wire_dtype, hier, inter_wire_dtype
+        )
     else:
-        fwd = lambda r: fft2_local(r.astype(cdtype), axis_name, overlap, wire_dtype)
-        inv = lambda F: jnp.real(ifft2_local(F, axis_name, overlap, wire_dtype))
+        fwd = lambda r: fft2_local(
+            r.astype(cdtype), axis_name, overlap, wire_dtype, hier,
+            inter_wire_dtype,
+        )
+        inv = lambda F: jnp.real(ifft2_local(
+            F, axis_name, overlap, wire_dtype, hier, inter_wire_dtype
+        ))
     return fwd, inv
 
 
@@ -169,6 +182,8 @@ def dist_cpadmm_step(
     overlap: int = 1,
     tail: str = "jnp",
     wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> DistCpadmmState:
     """One paper-faithful Alg. 3 iteration on local shard blocks.
 
@@ -178,7 +193,8 @@ def dist_cpadmm_step(
     line; broadcasts over leading batch axes.
     """
     fwd, inv = _transforms(
-        rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype
+        rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype,
+        hier, inter_wire_dtype,
     )
     tail_fn = _tail(tail)
 
@@ -208,6 +224,8 @@ def dist_cpadmm_step_fused(
     overlap: int = 1,
     tail: str = "jnp",
     wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
 ) -> DistCpadmmState:
     """Fused Alg. 3 iteration: 2 all-to-alls, one elementwise tail.
 
@@ -222,7 +240,8 @@ def dist_cpadmm_step_fused(
     (the stack axis leads them).
     """
     fwd_t, inv_t = _transforms(
-        rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype
+        rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype,
+        hier, inter_wire_dtype,
     )
     tail_fn = _tail(tail)
     fwd = fwd_t(jnp.stack([state.v + state.mu, state.z - state.nu]))

@@ -30,6 +30,21 @@ paper's Sec. 7 deblurring.  Four variants of the iteration are compared:
                 cross the wire — the modeled collective bytes come from the
                 compiled HLO, so the table reflects the true wire dtype
 
+A second, multi-host section compares the same best-lever iteration on a
+``data x host x device`` mesh (compat.make_hier_mesh), where the transform
+axis spans hosts and every cross-host byte rides DCN instead of ICI:
+
+    mh_flat     wire_bf16 lowered over the factored (host, device) axis as
+                one monolithic all-to-all — every transpose byte crosses
+                the host boundary and is charged at DCN_BW
+    mh_hier     the two-stage hierarchical exchange (hier_axes=(H, D),
+                dist/fft): full payload intra-host on ICI, only the
+                (H-1)/H cross-boundary fraction on DCN as collective-
+                permutes, with its own inter_wire_dtype
+
+    per-tier bytes are read off the compiled HLO (collective-permute = the
+    DCN hop), and the two-tier model (roofline.DCN_BW) scores both.
+
 This is the §Perf hillclimb cell for the paper's technique: the printed
 per-signal FFT-flop and wire-byte ratios are the measured value of each
 lever, and the JSON artifact pins them per push.
@@ -44,12 +59,14 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.dist.compat import make_hier_mesh
 from repro.dist.fft import padded_rfft_len
 from repro.dist.recovery import DistCpadmmState
 from repro.launch.hlo_analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import model_block_times
 from repro.ops import plan_from_parts
+from repro.ops.plan import _transform_extent
 
 SDS = jax.ShapeDtypeStruct
 
@@ -64,19 +81,22 @@ VARIANTS = (  # (tag, fused, rfft, overlap, wire_dtype)
 
 def lower_variant(
     mesh, n1, n2, batch, iters, fused, rfft=False, overlap=1,
-    wire_dtype="fp32", axis_name="model",
+    wire_dtype="fp32", axis_name="model", hier_axes=None,
+    inter_wire_dtype="fp32",
 ):
     """Lower one iteration block through the plan API's abstract entry point
     (``ExecutionPlan.cpadmm_block``): the batch rides (pod x) data, each
-    signal's transforms shard over the model axis — the same lowering the
-    unified drivers execute, here compiled from ShapeDtypeStructs only."""
+    signal's transforms shard over the model axis (or the factored
+    ``(host, device)`` pair) — the same lowering the unified drivers
+    execute, here compiled from ShapeDtypeStructs only."""
     dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     pl = plan_from_parts(
         mesh, n1=n1, n2=n2, rfft=rfft, overlap=overlap, fused=fused,
         batch_axis=dp, axis_name=axis_name, wire_dtype=wire_dtype,
+        hier_axes=hier_axes, inter_wire_dtype=inter_wire_dtype,
     )
     block = pl.cpadmm_block(iters)
-    model_size = mesh.shape[axis_name]
+    model_size = _transform_extent(mesh, pl.axis_name)
     ncols = padded_rfft_len(n2, model_size) if rfft else n2
     spec_s = SDS((n1, ncols), jnp.complex64)
     diag_s = SDS((n1, n2), jnp.float32)
@@ -85,14 +105,20 @@ def lower_variant(
     return block.lower(spec_s, spec_s, diag_s, real_b, state_s).compile()
 
 
-def analyze(compiled, iters, batch, overlap=1):
+def analyze(compiled, iters, batch, overlap=1, dcn="none"):
     # The roofline terms and the hidden-collective overlap model live in
     # launch/roofline.model_block_times — shared with the autotuner's
     # candidate scoring (ops/tune.py) so the dry-run tables and the tuner
-    # can never drift apart.
+    # can never drift apart.  ``dcn`` names which collective crosses hosts
+    # (tune._dcn_bytes policy): "permute" for hierarchical plans (exactly
+    # the inter-host hop), "all" for a flat exchange spanning hosts (every
+    # transpose byte), "none" for single-fabric meshes.
     c = analyze_compiled(compiled)
     a2a_bytes = c.collective_bytes.get("all-to-all", 0)
-    times = model_block_times(c, overlap)
+    cp_bytes = c.collective_bytes.get("collective-permute", 0)
+    dcn_bytes = {"none": 0.0, "permute": float(cp_bytes),
+                 "all": float(a2a_bytes)}[dcn]
+    times = model_block_times(c, overlap, dcn_bytes=dcn_bytes)
     return {
         "flops_per_dev": c.flops,
         "bytes_per_dev": c.bytes,
@@ -102,6 +128,7 @@ def analyze(compiled, iters, batch, overlap=1):
         "per_iter_a2a": c.collective_counts.get("all-to-all", 0) / iters,
         "flops_per_signal": c.flops / batch,
         "a2a_bytes_per_signal": a2a_bytes / batch,
+        "cp_bytes_per_signal": cp_bytes / batch,
     }
 
 
@@ -112,6 +139,12 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--iters", type=int, default=50)
     ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="host tier extent H of the multi-host section")
+    ap.add_argument("--devices-per-host", type=int, default=8,
+                    help="device tier extent D of the multi-host section")
+    ap.add_argument("--no-hier", action="store_true",
+                    help="skip the multi-host flat-vs-hier section")
     ap.add_argument("--out", default="artifacts/cs_dryrun.json")
     args = ap.parse_args()
 
@@ -193,6 +226,52 @@ def main():
             f"eff-collective {row['effective_collective_s']*1e3:6.1f}ms  "
             f"wire={row['wire_dtype']}"
         )
+
+    if not args.no_hier:
+        # multi-host section: same best-lever iteration (fused rfft, K=4,
+        # bf16 wires), transform axis factored over (host, device) so the
+        # flat exchange pays DCN for every byte and the hierarchical one
+        # only for the cross-boundary (H-1)/H fraction
+        H, D = args.hosts, args.devices_per_host
+        data = args.batch  # one data shard per signal, as in production
+        mesh_h = make_hier_mesh(data, H, D)
+        mh = [
+            ("mh_flat", None, "fp32", "all"),
+            ("mh_hier", (H, D), "bf16", "permute"),
+        ]
+        for tag, hier, iw, dcn in mh:
+            t0 = time.time()
+            compiled = lower_variant(
+                mesh_h, args.n1, args.n2, args.batch, args.iters,
+                fused=True, rfft=True, overlap=4, wire_dtype="bf16",
+                axis_name=("host", "device"), hier_axes=hier,
+                inter_wire_dtype=iw,
+            )
+            res = analyze(compiled, args.iters, args.batch, 4, dcn=dcn)
+            res["wire_dtype"] = "bf16"
+            res["inter_wire_dtype"] = iw
+            res["hier_axes"] = list(hier) if hier else None
+            res["compile_s"] = round(time.time() - t0, 1)
+            results[tag] = res
+            print(
+                f"{tag:10s} mesh=data{data} x host{H} x device{D}: "
+                f"ICI {res['ici_collective_s']*1e3:.1f}ms + DCN "
+                f"{res['dcn_collective_s']*1e3:.1f}ms = collective "
+                f"{res['collective_s']*1e3:.1f}ms  per-signal a2a "
+                f"{res['a2a_bytes_per_signal']/1e6:.1f}MB / inter-host "
+                f"{(res['dcn_bytes']/args.batch)/1e6:.1f}MB"
+            )
+        fl, hi = results["mh_flat"], results["mh_hier"]
+        print(
+            f"hier vs flat over {H} hosts: inter-host bytes "
+            f"{fl['dcn_bytes']/max(hi['dcn_bytes'],1):.2f}x down "
+            f"((H-1)/H of the payload crosses, demoted to "
+            f"{hi['inter_wire_dtype']}), modeled collective "
+            f"{fl['collective_s']/max(hi['collective_s'],1e-12):.2f}x down, "
+            f"modeled block "
+            f"{fl['modeled_total_s']/max(hi['modeled_total_s'],1e-12):.2f}x down"
+        )
+
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     json.dump(
         {"n1": args.n1, "n2": args.n2, "batch": args.batch,

@@ -14,9 +14,18 @@ the result-shape payload parsed per op.  Payload bytes use the operand's
 *own* dtype itemsize (hlo_analysis.DTYPE_BYTES), so wire-compressed
 collectives (``wire_dtype='bf16'``/``'fp16'`` plans, whose transpose
 payloads cross as 2-byte planes) are modeled at their true wire size with
-no special-casing here.  The multi-pod mesh discounts ICI
-bandwidth for nothing — cross-pod DCN is slower, so multipod collective
-terms are *lower bounds* (flagged in the table).
+no special-casing here.
+
+The collective term is two-tier: bytes that cross a host boundary ride the
+datacenter network at ``DCN_BW`` instead of ICI, so callers pass the
+cross-host fraction as ``model_block_times(..., dcn_bytes=...)`` and the
+term splits into ``ici_collective_s + dcn_collective_s``.  Hierarchical
+plans (``hier_axes=``, repro.dist.fft) put exactly the inter-host hop into
+``collective-permute`` ops, so their DCN bytes are read straight off the
+HLO walk; a flat all-to-all spanning hosts charges its whole payload to
+DCN.  With ``dcn_bytes=0`` (the default) the model reduces bit-for-bit to
+the single-fabric numbers, keeping pre-split tune-cache entries and
+``baseline_smoke.json`` valid until regenerated.
 
     python -m repro.launch.roofline [--dir artifacts/dryrun] [--md]
 """
@@ -32,6 +41,11 @@ from typing import List
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link
+# Datacenter network between hosts.  ~100 Gb/s NIC per chip pair on a v5e
+# pod slice boundary -> 12.5 GB/s, derated 2x for the a2a incast pattern.
+# Well under ICI_BW / H for small host counts, which is the regime where the
+# two-stage hierarchical exchange (1/H of the bytes on DCN) wins.
+DCN_BW = 6.25e9  # B/s per link
 
 WIRE_MULT = {
     "all-reduce": 2.0,  # ring: reduce-scatter + all-gather
@@ -45,12 +59,19 @@ WIRE_MULT = {
 from repro.configs.registry import SHAPES  # noqa: E402
 
 
-def model_block_times(cost, overlap: int = 1) -> dict:
+def model_block_times(cost, overlap: int = 1, dcn_bytes: float = 0.0) -> dict:
     """Roofline terms + the hidden-collective overlap model for one compiled
     block, from a :class:`repro.launch.hlo_analysis.Cost`.
 
     The shared scoring core of ``launch/cs_dryrun.py`` (the dry-run tables)
     and ``ops/tune.py`` (candidate ranking) — one cost model, two callers.
+
+    ``dcn_bytes`` is the portion of the wire bytes that crosses a host
+    boundary and therefore rides ``DCN_BW`` instead of ``ICI_BW`` (clamped
+    to the total — a caller can pass raw HLO collective-permute bytes
+    without worrying about multipliers).  The default 0.0 subtracts and
+    adds exact float zeros, so single-fabric scores are reproduced
+    bit-for-bit.
 
     Overlap model: with the transpose split into K chunks, chunk i's
     collective flies while chunk i+1's first-stage FFT+twiddle runs, so at
@@ -67,7 +88,10 @@ def model_block_times(cost, overlap: int = 1) -> dict:
     )
     compute_s = cost.flops / PEAK_FLOPS
     memory_s = cost.bytes / HBM_BW
-    collective_s = wire / ICI_BW
+    dcn_wire = min(float(dcn_bytes), wire)
+    ici_s = (wire - dcn_wire) / ICI_BW
+    dcn_s = dcn_wire / DCN_BW
+    collective_s = ici_s + dcn_s
     local_s = max(compute_s, memory_s)
     hidden_s = min((overlap - 1) / overlap * collective_s, 0.5 * local_s)
     effective_s = collective_s - hidden_s
@@ -75,6 +99,9 @@ def model_block_times(cost, overlap: int = 1) -> dict:
         "compute_s": compute_s,
         "memory_s": memory_s,
         "collective_s": collective_s,
+        "ici_collective_s": ici_s,
+        "dcn_collective_s": dcn_s,
+        "dcn_bytes": dcn_wire,
         "overlap": overlap,
         "hidden_collective_s": hidden_s,
         "hidden_collective_frac": hidden_s / collective_s if collective_s else 0.0,

@@ -35,6 +35,16 @@ Plan attributes = backend knobs
                 all-to-all payload precision (repro.dist.fft wire packing);
                 ``plan`` guards demoted wires with a one-matvec precision
                 probe and falls back to fp32 past :data:`WIRE_ERROR_BOUND`
+    hier_axes   (H, D) — run every transpose as the two-stage hierarchical
+                exchange over the mesh's (host, device) axis pair
+                (repro.dist.fft module docstring): intra-host all-to-all,
+                local reshuffle, then inter-host hops carrying only the
+                (H-1)/H cross-boundary payload.  None (default) keeps the
+                flat exchange; a tuple ``axis_name=(host, device)`` with
+                ``hier_axes=None`` is the flat layout *on* a hierarchical
+                mesh (one monolithic all-to-all over both tiers)
+    inter_wire_dtype  wire precision of only the inter-host (DCN) hops of
+                the hierarchical exchange; guarded together with wire_dtype
 
 All knobs live in one frozen, hashable :class:`PlanConfig` (also carrying
 the four-step ``n1 x n2`` factorization and the mesh ``axis_name``): every
@@ -67,11 +77,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist.compat import shard_map
 from repro.dist.fft import (
+    DEVICE_AXIS,
+    HOST_AXIS,
     MODEL_AXIS,
     WIRE_DTYPES,
+    col_spec,
     layout_2d,
     matvec_local,
     rmatvec_local,
+    row_spec,
     unlayout_2d,
 )
 from repro.dist.recovery import (
@@ -154,8 +168,10 @@ class PlanConfig:
     batch_axis: Any = None
     n1: Optional[int] = None
     n2: Optional[int] = None
-    axis_name: str = MODEL_AXIS
+    axis_name: Any = MODEL_AXIS
     wire_dtype: str = "fp32"
+    hier_axes: Any = None  # (H, D): two-stage transpose over (host, device)
+    inter_wire_dtype: str = "fp32"  # DCN-hop payload of the two-stage path
 
     def validate(self, distributed: bool) -> "PlanConfig":
         """THE validation site for plan knobs (every entry point funnels
@@ -169,6 +185,31 @@ class PlanConfig:
                 f"wire_dtype must be one of {sorted(WIRE_DTYPES)}, got "
                 f"{self.wire_dtype!r}"
             )
+        if self.inter_wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"inter_wire_dtype must be one of {sorted(WIRE_DTYPES)}, got "
+                f"{self.inter_wire_dtype!r}"
+            )
+        if not (isinstance(self.axis_name, str) or (
+            isinstance(self.axis_name, tuple) and len(self.axis_name) == 2
+            and all(isinstance(a, str) for a in self.axis_name)
+        )):
+            raise ValueError(
+                f"axis_name must be one mesh-axis name or a (host, device) "
+                f"pair of names, got {self.axis_name!r}"
+            )
+        if self.hier_axes is not None:
+            ok = (
+                isinstance(self.hier_axes, tuple) and len(self.hier_axes) == 2
+                and all(isinstance(x, int) and x >= 1 for x in self.hier_axes)
+            )
+            if not ok:
+                raise ValueError(
+                    f"hier_axes must be a (H, D) tuple of positive ints — "
+                    f"the (host, device) factorization of the transform "
+                    f"axis — or None for the flat exchange; got "
+                    f"{self.hier_axes!r}"
+                )
         if not distributed and self.wire_dtype != "fp32":
             raise ValueError(
                 f"wire_dtype={self.wire_dtype!r} compresses the transpose "
@@ -176,6 +217,24 @@ class PlanConfig:
                 f"transforms — a local (mesh=None) plan has no wire to "
                 f"compress and would silently ignore it; pass a mesh or "
                 f"leave wire_dtype='fp32' (valid values: "
+                f"{sorted(WIRE_DTYPES)})"
+            )
+        if not distributed and self.hier_axes is not None:
+            raise ValueError(
+                f"hier_axes={self.hier_axes!r} factors the transform axis "
+                f"of a *distributed* (host, device) mesh for the two-stage "
+                f"hierarchical transpose — a local (mesh=None) plan has no "
+                f"mesh axes to factor; pass a hierarchical mesh "
+                f"(repro.dist.compat.make_hier_mesh) or leave "
+                f"hier_axes=None (valid values: None or a (H, D) tuple)"
+            )
+        if self.hier_axes is None and self.inter_wire_dtype != "fp32":
+            raise ValueError(
+                f"inter_wire_dtype={self.inter_wire_dtype!r} compresses the "
+                f"inter-host hops of the *hierarchical* two-stage transpose "
+                f"— without hier_axes there is no inter-host tier and it "
+                f"would be silently ignored; set hier_axes=(H, D) or leave "
+                f"inter_wire_dtype='fp32' (valid values: "
                 f"{sorted(WIRE_DTYPES)})"
             )
         if not distributed and (
@@ -195,19 +254,22 @@ class PlanConfig:
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
-        if isinstance(d["batch_axis"], tuple):
-            d["batch_axis"] = list(d["batch_axis"])
+        for key in ("batch_axis", "axis_name", "hier_axes"):
+            if isinstance(d[key], tuple):
+                d[key] = list(d[key])
         return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanConfig":
         d = dict(d)
-        if isinstance(d.get("batch_axis"), list):
-            d["batch_axis"] = tuple(d["batch_axis"])
+        for key in ("batch_axis", "axis_name", "hier_axes"):
+            if isinstance(d.get(key), list):
+                d[key] = tuple(d[key])
         return cls(**d)
 
     def describe(self) -> str:
-        """Compact human-readable tag (bench rows, tuner logs)."""
+        """Compact human-readable tag (bench rows, tuner logs, serve bucket
+        keys — every knob that changes the compiled program must show)."""
         parts = [
             f"n1xn2={self.n1}x{self.n2}" if self.n1 else "n1xn2=auto",
             f"rfft={'on' if self.rfft else 'off'}",
@@ -220,6 +282,12 @@ class PlanConfig:
             parts.append(f"batch_axis={self.batch_axis}")
         if self.wire_dtype != "fp32":
             parts.append(f"wire={self.wire_dtype}")
+        if self.hier_axes is not None:
+            parts.append(f"hier={self.hier_axes[0]}x{self.hier_axes[1]}")
+        elif isinstance(self.axis_name, tuple):
+            parts.append("hier=flat")  # factored axis, flat exchange
+        if self.inter_wire_dtype != "fp32":
+            parts.append(f"inter_wire={self.inter_wire_dtype}")
         return " ".join(parts)
 
 
@@ -244,6 +312,46 @@ def resolve_plan_config(config: Optional[PlanConfig], *, distributed: bool,
     else:
         cfg = PlanConfig(**set_knobs)
     return cfg.validate(distributed)
+
+
+def _resolve_axes(cfg: PlanConfig, mesh):
+    """Mesh-dependent half of the hier validation (the shape-only half lives
+    in :meth:`PlanConfig.validate`): resolve the transform axis — one mesh
+    axis name, or the (host, device) pair when the plan is hierarchical or
+    the config names a factored axis — and check ``hier_axes`` against the
+    mesh's actual extents.  Returns ``(axis_name, hier_axes)``.
+    """
+    if cfg.hier_axes is None and not isinstance(cfg.axis_name, tuple):
+        return cfg.axis_name, None
+    axes = (
+        cfg.axis_name if isinstance(cfg.axis_name, tuple)
+        else (HOST_AXIS, DEVICE_AXIS)
+    )
+    missing = [a for a in axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"hierarchical plans shard the transform over the mesh-axis "
+            f"pair {axes}, but this mesh has axes "
+            f"{tuple(mesh.axis_names)} (missing {missing}); build the mesh "
+            f"with repro.dist.compat.make_hier_mesh(data, host, device) or "
+            f"pass axis_name=(host_axis, device_axis) naming existing axes"
+        )
+    extents = (mesh.shape[axes[0]], mesh.shape[axes[1]])
+    if cfg.hier_axes is not None and tuple(cfg.hier_axes) != extents:
+        raise ValueError(
+            f"hier_axes={cfg.hier_axes} does not factor this mesh's "
+            f"transform extent: axes {axes} have extents {extents} "
+            f"(H x D = {extents[0] * extents[1]}); valid value: "
+            f"hier_axes={extents}"
+        )
+    return axes, cfg.hier_axes
+
+
+def _transform_extent(mesh, axis_name) -> int:
+    """Total shard count p of the (possibly factored) transform axis."""
+    if isinstance(axis_name, str):
+        return mesh.shape[axis_name]
+    return mesh.shape[axis_name[0]] * mesh.shape[axis_name[1]]
 
 
 class PlannedOperator:
@@ -308,8 +416,10 @@ class ExecutionPlan:
     tail: str = "jnp"
     fused: bool = True
     batch_axis: Any = None
-    axis_name: str = MODEL_AXIS
+    axis_name: Any = MODEL_AXIS
     wire_dtype: str = "fp32"
+    hier_axes: Any = None
+    inter_wire_dtype: str = "fp32"
     spec2d: Any = None
     mask2d: Any = None
     norm_bound: Any = None
@@ -318,6 +428,11 @@ class ExecutionPlan:
     @property
     def is_distributed(self) -> bool:
         return self.mesh is not None
+
+    @property
+    def hier(self) -> bool:
+        """Whether transposes run as the two-stage hierarchical exchange."""
+        return self.hier_axes is not None
 
     @property
     def config(self) -> PlanConfig:
@@ -333,6 +448,8 @@ class ExecutionPlan:
             n2=self.n2,
             axis_name=self.axis_name,
             wire_dtype=self.wire_dtype,
+            hier_axes=self.hier_axes,
+            inter_wire_dtype=self.inter_wire_dtype,
         )
 
     @property
@@ -350,15 +467,19 @@ class ExecutionPlan:
         return self.operator.rmatvec(y)
 
     # -- sharding specs ----------------------------------------------------
+    # delegated to repro.dist.fft's spec builders, which own the device-major
+    # sharding convention for factored (host, device) transform axes
+    # (batched arrays keep their leading batch entry even when batch_axis is
+    # None — "batched but replicated" must not collapse to the 2-dim spec)
     def _row(self, batched: bool) -> P:
         if batched:
-            return P(self.batch_axis, self.axis_name, None)
-        return P(self.axis_name, None)
+            return P(self.batch_axis, *row_spec(self.axis_name))
+        return row_spec(self.axis_name)
 
     def _col(self, batched: bool) -> P:
         if batched:
-            return P(self.batch_axis, None, self.axis_name)
-        return P(None, self.axis_name)
+            return P(self.batch_axis, *col_spec(self.axis_name))
+        return col_spec(self.axis_name)
 
     # -- planned applications ---------------------------------------------
     def _apply(self, x2d: Array, transpose: bool) -> Array:
@@ -373,6 +494,8 @@ class ExecutionPlan:
                 transpose=transpose,
                 overlap=self.overlap,
                 wire_dtype=self.wire_dtype,
+                hier=self.hier,
+                inter_wire_dtype=self.inter_wire_dtype,
             ),
             mesh=self.mesh,
             in_specs=(self._col(False), self._row(batched)),
@@ -475,7 +598,7 @@ class ExecutionPlan:
             return step_fn(
                 spec, bs, dd, pty, state, pp,
                 self.axis_name, self.rfft, self.overlap, self.tail,
-                self.wire_dtype,
+                self.wire_dtype, self.hier, self.inter_wire_dtype,
             )
 
         step_sm = shard_map(
@@ -513,7 +636,7 @@ class ExecutionPlan:
                 return step_fn(
                     spec, b_spec, d_diag, pty, s, p,
                     self.axis_name, self.rfft, self.overlap, self.tail,
-                    self.wire_dtype,
+                    self.wire_dtype, self.hier, self.inter_wire_dtype,
                 ), None
 
             state, _ = lax.scan(body, state, None, length=iters)
@@ -566,11 +689,16 @@ def _wire_guard(wire_plan: ExecutionPlan) -> ExecutionPlan:
     The probe is cheap (one planned matvec each way on a unit-norm random
     signal) and catches both gradual quantization loss and hard fp16
     overflow (payload magnitudes past float16's 65504 max turn the probe
-    error non-finite, which fails the ``err <= bound`` check).
+    error non-finite, which fails the ``err <= bound`` check).  Both tiers
+    are guarded at once: a demoted ``inter_wire_dtype`` (hierarchical DCN
+    hops) trips the probe exactly like a demoted ``wire_dtype``, and the
+    fallback restores fp32 on both.
     """
-    if wire_plan.wire_dtype == "fp32":
+    if wire_plan.wire_dtype == "fp32" and wire_plan.inter_wire_dtype == "fp32":
         return wire_plan
-    ref_plan = dataclasses.replace(wire_plan, wire_dtype="fp32")
+    ref_plan = dataclasses.replace(
+        wire_plan, wire_dtype="fp32", inter_wire_dtype="fp32"
+    )
     n = wire_plan.n1 * wire_plan.n2
     x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
     x = x / jnp.linalg.norm(x)
@@ -581,10 +709,11 @@ def _wire_guard(wire_plan: ExecutionPlan) -> ExecutionPlan:
     bound = WIRE_ERROR_BOUND
     if not err <= bound:  # noqa: SIM300  (NaN/inf must fail the guard too)
         warnings.warn(
-            f"wire_dtype={wire_plan.wire_dtype!r} failed the precision "
+            f"wire_dtype={wire_plan.wire_dtype!r} / inter_wire_dtype="
+            f"{wire_plan.inter_wire_dtype!r} failed the precision "
             f"guard: relative matvec error {err:.3e} exceeds the bound "
             f"{bound:.1e} (REPRO_WIRE_ERROR_BOUND) — falling back to "
-            f"wire_dtype='fp32'",
+            f"fp32 wires on both tiers",
             RuntimeWarning,
             stacklevel=3,
         )
@@ -606,7 +735,8 @@ def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
             f"{type(op).__name__}"
         )
     n = circ.n
-    p = mesh.shape[cfg.axis_name]
+    axes, hier_axes = _resolve_axes(cfg, mesh)
+    p = _transform_extent(mesh, axes)
     n1, n2 = _factorize(n, cfg.n1, cfg.n2, p, cfg.rfft)
     if omega is None:
         mask = jnp.ones((n,), circ.col.dtype)
@@ -618,7 +748,7 @@ def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
     # trip through the time domain
     spec2d = jax.device_put(
         spectral.spectrum_layout_2d(circ.spec, n1, n2, rfft=cfg.rfft, p=p),
-        jax.sharding.NamedSharding(mesh, P(None, cfg.axis_name)),
+        jax.sharding.NamedSharding(mesh, col_spec(axes)),
     )
     built = ExecutionPlan(
         op=op,
@@ -630,8 +760,10 @@ def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
         tail=cfg.tail,
         fused=cfg.fused,
         batch_axis=cfg.batch_axis,
-        axis_name=cfg.axis_name,
+        axis_name=axes,
         wire_dtype=cfg.wire_dtype,
+        hier_axes=hier_axes,
+        inter_wire_dtype=cfg.inter_wire_dtype,
         spec2d=spec2d,
         mask2d=layout_2d(mask, n1, n2),
         norm_bound=op.operator_norm_bound(),
@@ -654,8 +786,10 @@ def plan(
     tail: Optional[str] = None,
     fused: Optional[bool] = None,
     batch_axis: Any = None,
-    axis_name: Optional[str] = None,
+    axis_name: Any = None,
     wire_dtype: Optional[str] = None,
+    hier_axes: Any = None,
+    inter_wire_dtype: Optional[str] = None,
 ) -> ExecutionPlan:
     """Lower ``op`` to an execution plan (see module docstring).
 
@@ -695,7 +829,8 @@ def plan(
             for k, v in dict(
                 n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
                 fused=fused, batch_axis=batch_axis, axis_name=axis_name,
-                wire_dtype=wire_dtype,
+                wire_dtype=wire_dtype, hier_axes=hier_axes,
+                inter_wire_dtype=inter_wire_dtype,
             ).items()
             if v is not None
         }
@@ -710,7 +845,8 @@ def plan(
             distributed=mesh is not None,
             n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
             fused=fused, batch_axis=batch_axis, axis_name=axis_name,
-            wire_dtype=wire_dtype,
+            wire_dtype=wire_dtype, hier_axes=hier_axes,
+            inter_wire_dtype=inter_wire_dtype,
         )
     return _plan_with_config(op, mesh, cfg)
 
@@ -728,8 +864,10 @@ def plan_from_parts(
     tail: Optional[str] = None,
     fused: Optional[bool] = None,
     batch_axis: Any = None,
-    axis_name: Optional[str] = None,
+    axis_name: Any = None,
     wire_dtype: Optional[str] = None,
+    hier_axes: Any = None,
+    inter_wire_dtype: Optional[str] = None,
 ) -> ExecutionPlan:
     """Distributed plan from pre-sharded parts instead of an operator.
 
@@ -748,13 +886,15 @@ def plan_from_parts(
         distributed=True,
         n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
         fused=fused, batch_axis=batch_axis, axis_name=axis_name,
-        wire_dtype=wire_dtype,
+        wire_dtype=wire_dtype, hier_axes=hier_axes,
+        inter_wire_dtype=inter_wire_dtype,
     )
     if cfg.n1 is None or cfg.n2 is None:
         raise ValueError(
             "plan_from_parts has no operator to infer n from: the config "
             "must carry a concrete n1 x n2 factorization"
         )
+    axes, hier = _resolve_axes(cfg, mesh)
     norm = jnp.max(jnp.abs(spec2d)) if spec2d is not None else None
     # no precision guard here: this entry point also serves the abstract
     # lowerings (no concrete spec2d at all) — plan() is the guarded route
@@ -767,8 +907,10 @@ def plan_from_parts(
         tail=cfg.tail,
         fused=cfg.fused,
         batch_axis=cfg.batch_axis,
-        axis_name=cfg.axis_name,
+        axis_name=axes,
         wire_dtype=cfg.wire_dtype,
+        hier_axes=hier,
+        inter_wire_dtype=cfg.inter_wire_dtype,
         spec2d=spec2d,
         mask2d=mask2d,
         norm_bound=norm,

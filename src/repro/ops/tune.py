@@ -15,8 +15,11 @@ Pipeline
 1.  **Enumerate** (:func:`candidate_configs`): feasible ``n1 x n2``
     factorizations (the ``_factorize`` default plus caller extras, filtered
     by the transpose-collective divisibility rules), rfft on/off, overlap
-    K in {1, 2, 4, 8}, tail substrates available on this backend, and
-    batch-axis splits the workload's batch actually divides over.
+    K in {1, 2, 4, 8}, tail substrates available on this backend,
+    batch-axis splits the workload's batch actually divides over, and — on
+    a factored ``(host, device)`` mesh — flat vs hierarchical exchange
+    (``hier_axes``) with per-tier wire dtypes (``inter_wire_dtype``),
+    scored by the two-tier ICI/DCN collective model.
 2.  **Score** (:func:`score_candidates`): lower each candidate's abstract
     CPADMM iteration block (:meth:`ExecutionPlan.cpadmm_block` from
     ShapeDtypeStructs only — no concrete arrays), walk the compiled HLO with
@@ -58,11 +61,17 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.dist.fft import MODEL_AXIS, padded_rfft_len
+from repro.dist.fft import DEVICE_AXIS, HOST_AXIS, MODEL_AXIS, padded_rfft_len
 from repro.dist.recovery import DistCpadmmState
 
 from . import spectral
-from .plan import PlanConfig, _factorize, _plan_with_config, plan_from_parts
+from .plan import (
+    PlanConfig,
+    _factorize,
+    _plan_with_config,
+    _transform_extent,
+    plan_from_parts,
+)
 
 SDS = jax.ShapeDtypeStruct
 
@@ -254,12 +263,24 @@ def candidate_configs(
     replace the factorization sweep.
     """
     pins = dict(pins or {})
-    axis_name = pins.get("axis_name", MODEL_AXIS)
-    if axis_name not in mesh.axis_names:
+    axis_name = pins.get("axis_name")
+    if axis_name is None:
+        # a hierarchical mesh (compat.make_hier_mesh) implies the factored
+        # transform axis; the tuner then races flat-layout vs two-stage
+        # hierarchical exchanges over it (hier_axes sweep below)
+        if HOST_AXIS in mesh.axis_names and DEVICE_AXIS in mesh.axis_names:
+            axis_name = (HOST_AXIS, DEVICE_AXIS)
+        else:
+            axis_name = MODEL_AXIS
+    if isinstance(axis_name, (list, tuple)):
+        axis_name = tuple(axis_name)
+    t_axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+    missing = [a for a in t_axes if a not in mesh.axis_names]
+    if missing:
         raise ValueError(
             f"axis_name {axis_name!r} not in mesh axes {mesh.axis_names}"
         )
-    p = mesh.shape[axis_name]
+    p = math.prod(mesh.shape[a] for a in t_axes)
     circ = getattr(op, "circ", op)
     n = circ.n
 
@@ -278,11 +299,43 @@ def candidate_configs(
     # spectra would make the guard demote it back to fp32 anyway
     wires = (pins["wire_dtype"],) if "wire_dtype" in pins else ("fp32", "bf16")
 
+    # hier_axes sweep: on a factored transform axis, race the flat layout
+    # (one monolithic all-to-all over both tiers) against the two-stage
+    # hierarchical exchange — the two-tier cost model splits them apart
+    if isinstance(axis_name, tuple):
+        extents = tuple(mesh.shape[a] for a in axis_name)
+        if "hier_axes" in pins:
+            ha = pins["hier_axes"]
+            hier_opts: Tuple[Any, ...] = (
+                tuple(ha) if ha is not None else None,
+            )
+        else:
+            hier_opts = (None, extents)
+    else:
+        ha = pins.get("hier_axes")
+        hier_opts = (tuple(ha) if ha is not None else None,)
+    # a non-fp32 inter wire only exists on hierarchical candidates (the flat
+    # exchange has no separate inter-host hop) — pinning it drops flat
+    if pins.get("inter_wire_dtype", "fp32") != "fp32":
+        hier_opts = tuple(h for h in hier_opts if h is not None)
+        if not hier_opts:
+            raise ValueError(
+                "inter_wire_dtype pin needs a hierarchical candidate space "
+                "(a (host, device) mesh, or hier_axes pinned non-None)"
+            )
+
+    def _inter_wires(hier) -> Tuple[str, ...]:
+        if hier is None:
+            return ("fp32",)
+        if "inter_wire_dtype" in pins:
+            return (pins["inter_wire_dtype"],)
+        return ("fp32", "bf16")  # same bf16-not-fp16 default as `wires`
+
     if "batch_axis" in pins:
         batch_axes: List[Any] = [pins["batch_axis"]]
     else:
         batch_axes = [None]
-        other = tuple(a for a in mesh.axis_names if a != axis_name)
+        other = tuple(a for a in mesh.axis_names if a not in t_axes)
         if other and batch:
             sizes = math.prod(mesh.shape[a] for a in other)
             if sizes > 1 and batch % sizes == 0:
@@ -302,12 +355,18 @@ def candidate_configs(
                 for fused in fuseds:
                     for ba in batch_axes:
                         for wire in wires:
-                            for K in overlaps:
-                                out.append(PlanConfig(
-                                    rfft=rfft, overlap=K, tail=tail,
-                                    fused=fused, batch_axis=ba, n1=n1, n2=n2,
-                                    axis_name=axis_name, wire_dtype=wire,
-                                ))
+                            for hier in hier_opts:
+                                for iw in _inter_wires(hier):
+                                    for K in overlaps:
+                                        out.append(PlanConfig(
+                                            rfft=rfft, overlap=K, tail=tail,
+                                            fused=fused, batch_axis=ba,
+                                            n1=n1, n2=n2,
+                                            axis_name=axis_name,
+                                            wire_dtype=wire,
+                                            hier_axes=hier,
+                                            inter_wire_dtype=iw,
+                                        ))
     if not out:
         raise ValueError(
             f"no feasible plan candidates for n={n} over a {p}-device "
@@ -326,9 +385,12 @@ def _group_key(cfg: PlanConfig) -> tuple:
 
     ``wire_dtype`` is part of the key: demoting the wire changes the
     compiled collective's payload bytes (the HLO the cost walk reads), not
-    just its schedule — so fp32 and bf16 wires never share a compile."""
+    just its schedule — so fp32 and bf16 wires never share a compile.  So
+    are ``hier_axes`` and ``inter_wire_dtype``: the hierarchical exchange
+    compiles to different collectives entirely (intra-tier all-to-all +
+    inter-tier collective-permutes vs one monolithic all-to-all)."""
     return (cfg.rfft, cfg.n1, cfg.n2, cfg.tail, cfg.fused, cfg.batch_axis,
-            cfg.axis_name, cfg.wire_dtype)
+            cfg.axis_name, cfg.wire_dtype, cfg.hier_axes, cfg.inter_wire_dtype)
 
 
 def _compile_group(mesh, cfg: PlanConfig, batch: int, iters: int):
@@ -337,7 +399,7 @@ def _compile_group(mesh, cfg: PlanConfig, batch: int, iters: int):
         mesh, config=dataclasses.replace(cfg, overlap=1)
     )
     block = pl.cpadmm_block(iters)
-    p = mesh.shape[cfg.axis_name]
+    p = _transform_extent(mesh, cfg.axis_name)
     ncols = padded_rfft_len(cfg.n2, p) if cfg.rfft else cfg.n2
     spec_s = SDS((cfg.n1, ncols), jnp.complex64)
     diag_s = SDS((cfg.n1, cfg.n2), jnp.float32)
@@ -346,16 +408,36 @@ def _compile_group(mesh, cfg: PlanConfig, batch: int, iters: int):
     return block.lower(spec_s, spec_s, diag_s, real_b, state_s).compile()
 
 
+def _dcn_bytes(cost, cfg: PlanConfig, mesh) -> float:
+    """Cross-host wire bytes of one compiled block, for the two-tier model.
+
+    Hierarchical plans put exactly the inter-host hop into
+    ``collective-permute`` ops (repro.dist.fft two-stage exchange), so their
+    DCN bytes read straight off the HLO walk.  A *flat* exchange over a
+    factored ``(host, device)`` axis spanning more than one host is a single
+    monolithic all-to-all whose every byte crosses the boundary — its whole
+    all-to-all payload is charged to DCN.  Single-axis plans have no host
+    tier and ride ICI only (0.0 — the bit-for-bit fallback).
+    """
+    if cfg.hier_axes is not None:
+        return float(cost.collective_bytes.get("collective-permute", 0.0))
+    if isinstance(cfg.axis_name, tuple) and mesh.shape[cfg.axis_name[0]] > 1:
+        return float(cost.collective_bytes.get("all-to-all", 0.0))
+    return 0.0
+
+
 def score_candidates(
     mesh, candidates: Sequence[PlanConfig], batch: int, iters: int = SCORE_ITERS
 ) -> List[Tuple[float, PlanConfig, dict]]:
     """Rank candidates by modeled block time, ascending.
 
     One compile + HLO walk per overlap-group; the overlap sweep is analytic
-    (:func:`model_block_times` on the shared K=1 cost).  Ties break toward
-    the *simpler* config — lower overlap, then rfft off — so a mesh where a
-    knob is cost-neutral (e.g. a 1-device axis, where collectives vanish)
-    keeps the defaults rather than picking complexity for nothing.
+    (:func:`model_block_times` on the shared K=1 cost).  Cross-host bytes
+    (:func:`_dcn_bytes`) are charged at ``DCN_BW`` — this is what splits
+    flat from hierarchical candidates on a multi-host mesh.  Ties break
+    toward the *simpler* config — lower overlap, then rfft off — so a mesh
+    where a knob is cost-neutral (e.g. a 1-device axis, where collectives
+    vanish) keeps the defaults rather than picking complexity for nothing.
     """
     from repro.launch.hlo_analysis import analyze_compiled
     from repro.launch.roofline import model_block_times
@@ -368,7 +450,10 @@ def score_candidates(
             compiled = _compile_group(mesh, cfg, batch, iters)
             costs[gk] = analyze_compiled(compiled)
             COUNTERS["scored"] += 1
-        times = model_block_times(costs[gk], cfg.overlap)
+        times = model_block_times(
+            costs[gk], cfg.overlap,
+            dcn_bytes=_dcn_bytes(costs[gk], cfg, mesh),
+        )
         scored.append((times["modeled_total_s"], cfg, times))
     scored.sort(key=lambda t: (t[0], t[1].overlap, t[1].rfft, t[1].describe()))
     return scored

@@ -409,3 +409,82 @@ def test_bf16_wire_dist_cpadmm_within_guard_bound():
                            wire_dtype="bf16")(*args)
     rel = _rel(unlayout_2d(zbf), unlayout_2d(z32))
     assert rel <= WIRE_ERROR_BOUND, f"bf16 wire: rel {rel:.2e}"
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-stage transpose: on the 1-device (1 x 1) host x device
+# mesh the exchange is degenerate (no inter-host hop), but the full hier
+# code path — device-major specs, tuple axis ranks, reorder/reshape — runs
+# and must match the flat single-axis transforms exactly.  The real H>1
+# parity and per-tier byte pins live in tests/dist_progs/hier_prog.py.
+# ---------------------------------------------------------------------------
+
+HIER_FACTORIZATIONS = [(32, 16), (16, 15), (15, 16), (15, 15)]
+
+
+def _hier_mesh_1dev():
+    return make_mesh((1, 1, 1), ("data", "host", "device"))
+
+
+@pytest.mark.parametrize("n1,n2", HIER_FACTORIZATIONS)
+@pytest.mark.parametrize("overlap", [1, 2, 3])
+def test_hier_fft_matches_flat(n1, n2, overlap):
+    n = n1 * n2
+    flat = make_mesh((1,), ("model",))
+    hier = _hier_mesh_1dev()
+    x = layout_2d(jax.random.normal(jax.random.PRNGKey(31), (n,)), n1, n2)
+
+    f1, i1 = make_distributed_fft(flat, n1, n2, overlap=overlap)
+    fh, ih = make_distributed_fft(
+        hier, n1, n2, axis_name=("host", "device"), overlap=overlap, hier=True
+    )
+    F1, Fh = f1(x.astype(jnp.complex64)), fh(x.astype(jnp.complex64))
+    assert _rel(Fh, F1) <= 1e-5
+    assert _rel(ih(Fh), i1(F1)) <= 1e-5
+
+    r1, ir1 = make_distributed_rfft(flat, n1, n2, overlap=overlap)
+    rh, irh = make_distributed_rfft(
+        hier, n1, n2, axis_name=("host", "device"), overlap=overlap, hier=True
+    )
+    H1, Hh = r1(x), rh(x)
+    assert Hh.shape == H1.shape
+    assert _rel(Hh, H1) <= 1e-5
+    assert _rel(irh(Hh), ir1(H1)) <= 1e-5
+
+
+@pytest.mark.parametrize("n1,n2", [(32, 16), (15, 16)])
+def test_hier_batched_data_axis_matches_flat(n1, n2):
+    n, B = n1 * n2, 3
+    flat = make_mesh((1, 1), ("data", "model"))
+    hier = _hier_mesh_1dev()
+    x = layout_2d(jax.random.normal(jax.random.PRNGKey(32), (B, n)), n1, n2)
+
+    r1, ir1 = make_distributed_rfft(flat, n1, n2, batch_axis="data", overlap=2)
+    rh, irh = make_distributed_rfft(
+        hier, n1, n2, axis_name=("host", "device"), batch_axis="data",
+        overlap=2, hier=True,
+    )
+    H1, Hh = r1(x), rh(x)
+    assert Hh.shape == H1.shape == (B, n1, padded_rfft_len(n2, 1))
+    assert _rel(Hh, H1) <= 1e-5
+    assert _rel(irh(Hh), ir1(H1)) <= 1e-5
+
+
+@pytest.mark.parametrize("rfft", [False, True])
+def test_hier_matvec_matches_flat(rfft):
+    flat = make_mesh((1,), ("model",))
+    hier = _hier_mesh_1dev()
+    _, C, _, _ = _problem()
+    x2d = layout_2d(jax.random.normal(jax.random.PRNGKey(33), (N,)), N1, N2)
+    if rfft:
+        spec = make_distributed_rfft(flat, N1, N2)[0](layout_2d(C.col, N1, N2))
+    else:
+        spec = make_distributed_fft(flat, N1, N2)[0](
+            layout_2d(C.col, N1, N2).astype(jnp.complex64)
+        )
+    mv1 = make_distributed_matvec(flat, rfft=rfft)
+    mvh = make_distributed_matvec(
+        hier, rfft=rfft, axis_name=("host", "device"), hier=True
+    )
+    for transpose in (False, True):
+        assert _rel(mvh(spec, x2d, transpose), mv1(spec, x2d, transpose)) <= 1e-5

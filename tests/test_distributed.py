@@ -20,6 +20,7 @@ PROGS = [
     "autotune_prog.py",
     "serve_prog.py",
     "wire_prog.py",
+    "hier_prog.py",
 ]
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")

@@ -11,6 +11,8 @@ Pins the ISSUE 4 contract:
     output to the plan route.
 """
 
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -510,3 +512,92 @@ def test_fp16_wire_overflow_triggers_fp32_fallback():
     x = jax.random.normal(jax.random.PRNGKey(9), (N,))
     ref = plan(op_big, mesh, n1=N1, n2=N2).matvec(x)
     np.testing.assert_array_equal(np.asarray(pl.matvec(x)), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (host, device) transform axis — validation + describe
+# ---------------------------------------------------------------------------
+
+
+def test_local_plan_rejects_hier_axes_loudly():
+    """The single validation site refuses hier_axes without a mesh, in the
+    valid-values-listed error style."""
+    prob = _problem()
+    with pytest.raises(ValueError, match="no mesh axes to factor"):
+        plan(prob.op, hier_axes=(2, 2))
+    with pytest.raises(ValueError, match=r"valid values: None or a \(H, D\)"):
+        PlanConfig(hier_axes=(2, 2)).validate(distributed=False)
+
+
+def test_malformed_hier_axes_rejected():
+    for bad in ((2,), (2, 2, 2), (2, 0), (2.0, 2), "2x2"):
+        with pytest.raises(ValueError, match="hier_axes must be a"):
+            PlanConfig(hier_axes=bad).validate(distributed=True)
+
+
+def test_inter_wire_without_hier_rejected():
+    """inter_wire_dtype only names the DCN hop of the hierarchical exchange
+    — accepting it on a flat plan would silently ignore the knob."""
+    prob = _problem()
+    mesh = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="inter_wire_dtype"):
+        plan(prob.op, mesh, n1=N1, n2=N2, inter_wire_dtype="bf16")
+    with pytest.raises(ValueError, match="inter_wire_dtype must be one of"):
+        PlanConfig(hier_axes=(2, 2), inter_wire_dtype="int8").validate(
+            distributed=True
+        )
+
+
+def test_hier_axes_must_match_mesh_extents():
+    """hier_axes=(H, D) is checked against the mesh's actual (host, device)
+    extents, and the error names the valid value."""
+    from repro.dist.compat import make_hier_mesh
+
+    prob = _problem()
+    mesh = make_hier_mesh(1, 1, 1)
+    with pytest.raises(ValueError, match=r"valid value: hier_axes=\(1, 1\)"):
+        plan(prob.op, mesh, n1=N1, n2=N2, hier_axes=(2, 2))
+    # and a mesh without the (host, device) axes teaches the fix
+    flat = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="make_hier_mesh"):
+        plan(prob.op, flat, n1=N1, n2=N2, hier_axes=(1, 1))
+
+
+def test_hier_describe_tags_split_configs():
+    base = PlanConfig(rfft=True, n1=N1, n2=N2)
+    hier = PlanConfig(rfft=True, n1=N1, n2=N2, hier_axes=(2, 4),
+                      axis_name=("host", "device"))
+    tflat = PlanConfig(rfft=True, n1=N1, n2=N2, axis_name=("host", "device"))
+    iw = PlanConfig(rfft=True, n1=N1, n2=N2, hier_axes=(2, 4),
+                    axis_name=("host", "device"), inter_wire_dtype="bf16")
+    assert "hier=" not in base.describe()
+    assert "hier=2x4" in hier.describe()
+    assert "hier=flat" in tflat.describe()  # factored axis, one flat a2a
+    assert "inter_wire=bf16" in iw.describe()
+    assert len({c.describe() for c in (base, hier, tflat, iw)}) == 4
+
+
+def test_hier_config_round_trips_through_json():
+    cfg = PlanConfig(rfft=True, n1=N1, n2=N2, hier_axes=(2, 4),
+                     axis_name=("host", "device"), inter_wire_dtype="bf16")
+    again = PlanConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert again == cfg
+    assert isinstance(again.hier_axes, tuple)
+    assert isinstance(again.axis_name, tuple)
+
+
+def test_hier_plan_solves_on_degenerate_mesh():
+    """The 1x1 (host, device) mesh runs the full hier code path in the fast
+    lane; the solve must match the flat plan bit-for-bit (no inter hop to
+    demote, no intra shuffle to get wrong)."""
+    from repro.dist.compat import make_hier_mesh
+
+    prob = _problem()
+    flat = plan(prob.op, make_mesh((1,), ("model",)), n1=N1, n2=N2, rfft=True)
+    hier = plan(prob.op, make_hier_mesh(1, 1, 1), n1=N1, n2=N2, rfft=True,
+                hier_axes=(1, 1))
+    assert hier.hier and hier.axis_name == ("host", "device")
+    kw = dict(iters=40, record_every=40, alpha=ALPHA, rho=RHO, sigma=SIGMA)
+    xf, _ = solve(prob, "cpadmm", plan=flat, **kw)
+    xh, _ = solve(prob, "cpadmm", plan=hier, **kw)
+    assert jnp.array_equal(xf, xh)

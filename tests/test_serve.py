@@ -304,3 +304,26 @@ def test_recycled_slots_with_bf16_wire_bucket_isolated():
         x32 = solo["w32" + rid16[len("w16"):]]
         rel = np.linalg.norm(x16 - x32) / (np.linalg.norm(x32) + 1e-12)
         assert 0 < rel <= 2 * WIRE_ERROR_BOUND, (rid16, rel)
+
+
+def test_hier_plan_splits_buckets():
+    """Hierarchical and flat plans must never share a serve lane — the
+    exchange strategy changes the compiled program, and the bucket key
+    embeds PlanConfig.describe()'s hier=/inter_wire= tags.  All four
+    configs on the same operator land in four distinct buckets."""
+    op = _op()
+    base = _workload(op, 1)[0]
+    flat = PlanConfig(rfft=True, n1=8, n2=16)
+    tflat = PlanConfig(rfft=True, n1=8, n2=16, axis_name=("host", "device"))
+    hier = PlanConfig(rfft=True, n1=8, n2=16, axis_name=("host", "device"),
+                      hier_axes=(2, 4))
+    hier16 = PlanConfig(rfft=True, n1=8, n2=16, axis_name=("host", "device"),
+                        hier_axes=(2, 4), inter_wire_dtype="bf16")
+    srv = _server()
+    keys = [
+        srv.bucket_key(dataclasses.replace(base, plan_config=c))
+        for c in (flat, tflat, hier, hier16)
+    ]
+    assert len(set(keys)) == 4, keys
+    assert "hier=2x4" in keys[2] and "inter_wire=bf16" in keys[3]
+    assert "hier=" not in keys[0] and "hier=flat" in keys[1]

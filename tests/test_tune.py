@@ -340,3 +340,105 @@ def test_one_device_tie_breaks_to_fp32_wire():
     scored = tune.score_candidates(mesh, cands, batch=1, iters=2)
     assert scored[0][1].wire_dtype == "fp32"
     assert tune.COUNTERS["scored"] == 2  # wire splits the compile group
+
+
+# ---------------------------------------------------------------------------
+# hierarchical candidates + the two-tier cost model
+# ---------------------------------------------------------------------------
+
+
+def test_factored_mesh_auto_enumerates_flat_and_hier():
+    """A (host, device) mesh with no pins races the flat layout against the
+    hierarchical exchange, with bf16 inter wires only on hier candidates
+    (flat has no inter-host hop to demote)."""
+    from repro.dist.compat import make_hier_mesh
+
+    op = _problem().op
+    mesh = make_hier_mesh(1, 1, 1)
+    cands = tune.candidate_configs(op, mesh)
+    assert {c.hier_axes for c in cands} == {None, (1, 1)}
+    assert all(c.axis_name == ("host", "device") for c in cands)
+    assert {c.inter_wire_dtype for c in cands if c.hier_axes is None} \
+        == {"fp32"}
+    assert {c.inter_wire_dtype for c in cands if c.hier_axes is not None} \
+        == {"fp32", "bf16"}
+    # a hier pin collapses the sweep; a flat mesh never grows hier candidates
+    pinned = tune.candidate_configs(op, mesh, pins={"hier_axes": (1, 1)})
+    assert {c.hier_axes for c in pinned} == {(1, 1)}
+    flat = tune.candidate_configs(op, make_mesh((1,), ("model",)))
+    assert {c.hier_axes for c in flat} == {None}
+
+
+def test_inter_wire_pin_drops_flat_candidates():
+    from repro.dist.compat import make_hier_mesh
+
+    op = _problem().op
+    cands = tune.candidate_configs(
+        op, make_hier_mesh(1, 1, 1), pins={"inter_wire_dtype": "bf16"}
+    )
+    assert cands and all(c.hier_axes == (1, 1) for c in cands)
+    with pytest.raises(ValueError, match="hierarchical candidate space"):
+        tune.candidate_configs(
+            op, make_mesh((1,), ("model",)), pins={"inter_wire_dtype": "bf16"}
+        )
+
+
+def test_group_key_splits_on_hier_and_inter_wire():
+    """hier compiles different collectives entirely (a2a + permutes vs one
+    monolithic a2a) and the inter wire changes the permute payload — neither
+    may share a compile with its flat/fp32 twin."""
+    a = PlanConfig(rfft=True, overlap=1, n1=8, n2=8,
+                   axis_name=("host", "device"))
+    h = dataclasses.replace(a, hier_axes=(2, 4))
+    hw = dataclasses.replace(h, inter_wire_dtype="bf16")
+    assert len({tune._group_key(c) for c in (a, h, hw)}) == 3
+    assert tune._group_key(h) == tune._group_key(
+        dataclasses.replace(h, overlap=4))
+
+
+def test_dcn_bytes_policy():
+    """Hier plans charge exactly their collective-permute bytes to DCN; a
+    flat exchange spanning hosts charges all its all-to-all bytes; single-
+    axis plans charge nothing (the bit-for-bit fallback)."""
+    from repro.dist.compat import make_hier_mesh
+
+    class _Cost:
+        collective_bytes = {"all-to-all": 1000.0, "collective-permute": 250.0}
+
+    mesh_h = make_hier_mesh(1, 1, 1)
+    hier = PlanConfig(hier_axes=(1, 1), axis_name=("host", "device"))
+    tflat = PlanConfig(axis_name=("host", "device"))
+    single = PlanConfig()
+    assert tune._dcn_bytes(_Cost(), hier, mesh_h) == 250.0
+    # H=1: the "flat" exchange never leaves the host -> ICI only
+    assert tune._dcn_bytes(_Cost(), tflat, mesh_h) == 0.0
+    assert tune._dcn_bytes(_Cost(), single, make_mesh((1,), ("model",))) == 0.0
+
+
+def test_two_tier_model_ranks_hier_above_flat():
+    """Under the two-tier model a hier block (full payload on ICI + 1/H on
+    DCN) must outscore the flat block (full payload on DCN) whenever
+    DCN_BW < ICI_BW / H — asserted on synthetic costs through the real
+    scoring math, pinning the win condition the dryrun table reports."""
+    from repro.launch.roofline import DCN_BW, ICI_BW, model_block_times
+
+    class _Cost:
+        flops = 1e9
+        bytes = 1e6
+        collective_bytes: dict = {}
+
+    B, H = 8e8, 2
+    flat_cost, hier_cost = _Cost(), _Cost()
+    flat_cost.collective_bytes = {"all-to-all": B}
+    hier_cost.collective_bytes = {"all-to-all": B,
+                                  "collective-permute": B / H}
+    assert DCN_BW < ICI_BW / H  # the regime the constants encode
+    t_flat = model_block_times(flat_cost, dcn_bytes=B)
+    t_hier = model_block_times(hier_cost, dcn_bytes=B / H)
+    assert t_hier["collective_s"] < t_flat["collective_s"]
+    assert t_hier["dcn_collective_s"] == pytest.approx(
+        t_flat["dcn_collective_s"] / H)
+    # and with no DCN bytes the split reproduces the single-tier term
+    t0 = model_block_times(flat_cost)
+    assert t0["collective_s"] == B / ICI_BW == t0["ici_collective_s"]
+    assert t0["dcn_collective_s"] == 0.0
