@@ -34,6 +34,7 @@ SUITE_NAMES = (
     "serve",  # beyond-paper: continuous-batching dispatcher vs static batch
     "wire",  # beyond-paper: wire-compressed collective precision sweep
     "hier",  # beyond-paper: hierarchical two-stage transpose, per-tier bytes
+    "prox",  # beyond-paper: pluggable-prior cost per solve + TV map-making
 )
 
 

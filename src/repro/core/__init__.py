@@ -4,14 +4,17 @@ from .circulant import (  # noqa: F401
     Circulant,
     DenseOperator,
     PartialCirculant,
+    airy_blur,
     compose_sensing_blur,
     densify,
+    gaussian_blur,
     gaussian_circulant,
     moving_average_blur,
     partial_gaussian_circulant,
     partial_romberg_circulant,
     random_omega,
     romberg_circulant,
+    shift_circulant,
 )
 from .soft_threshold import soft_threshold  # noqa: F401
 from .solvers import (  # noqa: F401

@@ -69,13 +69,16 @@ def dense_admm_init(op, y: Array) -> DenseAdmmState:
 
 
 def dense_admm_step(
-    const: DenseAdmmConst, state: DenseAdmmState, alpha: float, rho: float
+    const: DenseAdmmConst, state: DenseAdmmState, alpha: float, rho: float, prox=None
 ) -> DenseAdmmState:
-    """Alg. 2 lines 4-6."""
+    """Alg. 2 lines 4-6 (``prox=None`` = the paper's soft threshold)."""
     x = jnp.einsum(
         "nk,...k->...n", const.B, const.Aty + rho * (state.z - state.u)
     )
-    z = soft_threshold(x + state.u, alpha / rho)
+    if prox is None:
+        z = soft_threshold(x + state.u, alpha / rho)
+    else:
+        z = prox.apply(x + state.u, alpha / rho)
     u = state.u + x - z
     return DenseAdmmState(x=x, z=z, u=u)
 
@@ -132,27 +135,32 @@ def _apply_spec(spec: Array, x: Array, n: int) -> Array:
 
 
 def cpadmm_tail(
-    x: Array, cx: Array, d_diag: Array, pty: Array, mu: Array, nu: Array, p
+    x: Array, cx: Array, d_diag: Array, pty: Array, mu: Array, nu: Array, p, prox=None
 ) -> tuple:
-    """The elementwise iteration tail shared by every CPADMM variant.
+    """The iteration tail shared by every CPADMM variant.
 
     Everything in Alg. 3 after the two circulant applies (x and Cx) is
-    pointwise: the v-update, the soft-threshold z-update, and both dual
-    updates.  Single- and multi-device steps call this one definition so
-    the jnp path and the fused Pallas kernel (kernels/cpadmm_tail) are
-    pinned against the same math.  ``p`` is any params tuple exposing
-    alpha/rho/sigma/tau1/tau2 (CpadmmParams or DistCpadmmParams).
+    the v-update, the z-update, and both dual updates.  Single- and
+    multi-device steps call this one definition so the jnp path and the
+    fused Pallas kernel (kernels/cpadmm_tail) are pinned against the same
+    math.  ``p`` is any params tuple exposing alpha/rho/sigma/tau1/tau2
+    (CpadmmParams or DistCpadmmParams).  ``prox=None`` is the paper's
+    soft-threshold z-update, under which the whole tail is elementwise
+    (the fused-kernel contract); a ``Prox`` swaps the prior.
     Returns (v, z, mu', nu').
     """
     v = d_diag * (pty + p.rho * (cx - mu))
-    z = soft_threshold(x + nu, p.alpha / p.sigma)
+    if prox is None:
+        z = soft_threshold(x + nu, p.alpha / p.sigma)
+    else:
+        z = prox.apply(x + nu, p.alpha / p.sigma)
     mu_new = mu + p.tau1 * (v - cx)
     nu_new = nu + p.tau2 * (x - z)
     return v, z, mu_new, nu_new
 
 
 def cpadmm_step(
-    op: PartialCirculant, const: CpadmmConst, state: CpadmmState, p: CpadmmParams
+    op: PartialCirculant, const: CpadmmConst, state: CpadmmState, p: CpadmmParams, prox=None
 ) -> CpadmmState:
     """One Alg. 3 iteration (scaled-dual form).
 
@@ -170,7 +178,9 @@ def cpadmm_step(
     x = _apply_spec(const.b_spec, rhs, n)
 
     cx = C.matvec(x)
-    v, z, mu, nu = cpadmm_tail(x, cx, const.d_diag, const.Pty, state.mu, state.nu, p)
+    v, z, mu, nu = cpadmm_tail(
+        x, cx, const.d_diag, const.Pty, state.mu, state.nu, p, prox=prox
+    )
     return CpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)
 
 

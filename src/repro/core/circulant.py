@@ -293,6 +293,70 @@ def moving_average_blur(n: int, order: int, dtype=jnp.float32) -> Circulant:
     return Circulant.from_first_row(row)
 
 
+def gaussian_blur(n: int, sigma: float, dtype=jnp.float32) -> Circulant:
+    """Gaussian PSF, periodized on the circle: row[j] ~ exp(-d(j)^2 / 2 sigma^2)
+    with d(j) = min(j, n - j) the circular distance, normalized to sum 1.
+
+    ``sigma`` must lie in (0, n]: non-positive widths are degenerate and a
+    width beyond the signal wraps into a nearly flat (information-destroying)
+    kernel — same loudness contract as :func:`moving_average_blur`.
+    """
+    if not 0 < sigma <= n:
+        raise ValueError(
+            f"gaussian blur width must satisfy 0 < sigma <= n; got sigma={sigma}, "
+            f"n={n} (sigma > n wraps the kernel into a flat average)"
+        )
+    j = jnp.arange(n, dtype=dtype)
+    d = jnp.minimum(j, n - j)
+    row = jnp.exp(-0.5 * (d / sigma) ** 2)
+    return Circulant.from_first_row(row / jnp.sum(row))
+
+
+def _bessel_j1(x: Array, nodes: int = 128) -> Array:
+    """J1 by fixed midpoint quadrature of (1/pi) \\int_0^pi cos(t - x sin t) dt.
+
+    jax 0.4.x ships no Bessel J; the integral form converges fast for the
+    moderate arguments an Airy PSF needs (the far tail is masked off below).
+    """
+    t = (jnp.arange(nodes, dtype=x.dtype) + 0.5) * (jnp.pi / nodes)
+    return jnp.mean(jnp.cos(t - x[..., None] * jnp.sin(t)), axis=-1)
+
+
+def airy_blur(n: int, radius: float, dtype=jnp.float32) -> Circulant:
+    """Airy-disk PSF — the diffraction pattern of a circular telescope
+    aperture: intensity (2 J1(u)/u)^2 with ``radius`` the first dark ring
+    (u = 3.8317 d / radius), periodized over circular distance, truncated
+    past four rings (the tail carries ~0 flux), normalized to sum 1.
+
+    ``radius`` must lie in (0, n]: same validation contract as
+    :func:`moving_average_blur`.
+    """
+    if not 0 < radius <= n:
+        raise ValueError(
+            f"airy blur radius must satisfy 0 < radius <= n; got radius={radius}, "
+            f"n={n} (the first dark ring cannot sit outside the signal)"
+        )
+    first_zero = 3.8317  # first root of J1
+    j = jnp.arange(n, dtype=dtype)
+    d = jnp.minimum(j, n - j)
+    u = first_zero * d / radius
+    safe_u = jnp.where(u > 0, u, 1.0)
+    intensity = jnp.where(u > 0, (2.0 * _bessel_j1(safe_u) / safe_u) ** 2, 1.0)
+    intensity = jnp.where(d <= 4.0 * radius, intensity, 0.0)
+    return Circulant.from_first_row(intensity / jnp.sum(intensity))
+
+
+def shift_circulant(n: int, shift: int, dtype=jnp.float32) -> Circulant:
+    """The raster-offset operator S_s with ``S_s x = roll(x, s)`` — first
+    column e_{s mod n}, unit-modulus spectrum.  Composing ``blur @ S_s``
+    expresses one offset observation frame of a map-making scan
+    (repro.core.mapmaking) as a single circulant."""
+    if n <= 0:
+        raise ValueError(f"shift circulant needs n > 0; got n={n}")
+    col = jnp.zeros((n,), dtype).at[int(shift) % n].set(1.0)
+    return Circulant.from_first_col(col)
+
+
 def compose_sensing_blur(sense: Circulant, blur: Circulant) -> Circulant:
     """A = C @ B — still circulant (the key Sec. 7 observation)."""
     if sense.n != blur.n:

@@ -25,15 +25,18 @@ loss still decreases on a real model).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.ops.prox import L1Prox
+
 from .circulant import Circulant, PartialCirculant
-from .soft_threshold import soft_threshold
 
 Array = jax.Array
+
+_L1 = L1Prox()  # decode default: the paper's soft threshold, via the prox layer
 
 
 class CompressorSpec(NamedTuple):
@@ -43,6 +46,7 @@ class CompressorSpec(NamedTuple):
     m: int  # measurement count
     decode_iters: int  # ISTA steps at the receiver
     alpha: float  # decode threshold weight
+    prox: Any = None  # decode prior (repro.ops.prox); None = l1 soft threshold
 
 
 class CompressorState(NamedTuple):
@@ -58,9 +62,17 @@ def _pad_to(x: Array, n: int) -> Array:
 
 
 def make_compressor(
-    key: Array, dim: int, ratio: int = 8, decode_iters: int = 50, alpha: float = 3e-3
+    key: Array,
+    dim: int,
+    ratio: int = 8,
+    decode_iters: int = 50,
+    alpha: float = 3e-3,
+    prox=None,
 ) -> Tuple[CompressorSpec, CompressorState]:
-    """ratio = n/m compression factor on the wire."""
+    """ratio = n/m compression factor on the wire.  ``prox=`` selects the
+    decode prior (frozen Prox dataclasses are hashable, so the spec stays
+    jit-closable); None is the l1 soft threshold, bit-exact with the
+    pre-prox decoder."""
     n = max(8, int(2 ** jnp.ceil(jnp.log2(max(dim, 2)))))  # pad to pow2 for FFT
     n = int(n)
     m = max(1, n // ratio)
@@ -70,7 +82,7 @@ def make_compressor(
 
     circ = romberg_circulant(kc, n)
     omega = random_omega(ko, n, m)
-    spec = CompressorSpec(n=n, m=m, decode_iters=decode_iters, alpha=alpha)
+    spec = CompressorSpec(n=n, m=m, decode_iters=decode_iters, alpha=alpha, prox=prox)
     state = CompressorState(
         col=circ.col, omega=omega, residual=jnp.zeros((n,), jnp.float32)
     )
@@ -94,13 +106,14 @@ def decode(spec: CompressorSpec, state: CompressorState, y: Array) -> Array:
     """Fixed-k FISTA decode (accelerated paper Alg. 1; tau=1 is safe since
     the Romberg operator has orthogonal rows).  Scanned — jit/pjit friendly."""
     op = _op(state)
+    prox = spec.prox if spec.prox is not None else _L1
 
     def body(carry, _):
         x, x_prev, t = carry
         t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
         v = x + ((t - 1.0) / t_next) * (x - x_prev)
         r = y - op.matvec(v)
-        x_new = soft_threshold(v + op.rmatvec(r), spec.alpha)
+        x_new = prox.apply(v + op.rmatvec(r), spec.alpha)
         return (x_new, x, t_next), None
 
     x0 = jnp.zeros((spec.n,), jnp.float32)

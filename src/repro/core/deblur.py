@@ -36,7 +36,9 @@ import jax.numpy as jnp
 from .circulant import (
     Circulant,
     PartialCirculant,
+    airy_blur,
     compose_sensing_blur,
+    gaussian_blur,
     gaussian_circulant,
     moving_average_blur,
     random_omega,
@@ -44,6 +46,24 @@ from .circulant import (
 )
 
 Array = jax.Array
+
+BLUR_KINDS = ("moving-average", "gaussian", "airy")
+
+
+def _make_blur(n: int, kind: str, order: float, dtype) -> Circulant:
+    """Dispatch a PSF family by name; ``order`` is the family's width knob.
+
+    moving-average takes the paper's integer raster length L; gaussian reads
+    it as the std-dev sigma (pixels); airy as the first-null radius (pixels).
+    Each builder does its own loud 0 < order <= n validation.
+    """
+    if kind == "moving-average":
+        return moving_average_blur(n, int(order), dtype=dtype)
+    if kind == "gaussian":
+        return gaussian_blur(n, float(order), dtype=dtype)
+    if kind == "airy":
+        return airy_blur(n, float(order), dtype=dtype)
+    raise ValueError(f"blur_kind must be one of {BLUR_KINDS}, got {kind!r}")
 
 
 class DeblurProblem(NamedTuple):
@@ -56,14 +76,19 @@ class DeblurProblem(NamedTuple):
 def build_deblur_problem(
     key: Array,
     image: Array,
-    blur_order: int = 5,
+    blur_order: float = 5,
     subsample: float = 0.5,
     sensing: str = "gaussian",
+    blur_kind: str = "moving-average",
 ) -> DeblurProblem:
     """Paper Sec. 7 setup: L=5 raster blur, m = n/2 measurements.
 
     ``sensing='gaussian'`` is paper-faithful; ``'romberg'`` is the
     beyond-paper well-conditioned variant (see circulant.py).
+    ``blur_kind`` picks the PSF family (``moving-average`` is the paper's
+    raster filter; ``gaussian``/``airy`` are the astronomy-realistic
+    circulant PSFs) with ``blur_order`` as its width knob — see
+    :func:`_make_blur`.
     """
     if image.ndim != 2:
         raise ValueError(
@@ -79,7 +104,7 @@ def build_deblur_problem(
     kc, ko = jax.random.split(key)
     make = gaussian_circulant if sensing == "gaussian" else romberg_circulant
     sense = make(kc, n, dtype=x.dtype)
-    blur = moving_average_blur(n, blur_order, dtype=x.dtype)
+    blur = _make_blur(n, blur_kind, blur_order, x.dtype)
     joint = compose_sensing_blur(sense, blur)  # C B, circulant
     omega = random_omega(ko, n, m)
     op = PartialCirculant(joint, omega)
@@ -91,9 +116,10 @@ def build_deblur_problem(
 def build_multiframe_deblur_problem(
     key: Array,
     images: Array,
-    blur_order: int = 5,
+    blur_order: float = 5,
     subsample: float = 0.5,
     sensing: str = "gaussian",
+    blur_kind: str = "moving-average",
 ) -> DeblurProblem:
     """Sec. 7 setup for a (F, H, W) frame stack through ONE shared optic.
 
@@ -111,6 +137,7 @@ def build_multiframe_deblur_problem(
     single = build_deblur_problem(
         key, images.reshape(-1, *images.shape[-2:])[0],
         blur_order=blur_order, subsample=subsample, sensing=sensing,
+        blur_kind=blur_kind,
     )
     n = images.shape[-2] * images.shape[-1]
     x = images.reshape(images.shape[:-2] + (n,))
@@ -135,6 +162,7 @@ def build_deblur_plan(
     batch_axis: str | None = None,
     axis_name: str | None = None,
     wire_dtype: str | None = None,
+    prox=None,
 ):
     """Lower the joint sensing+blur operator ``A = P (C B)`` to a backend.
 
@@ -172,7 +200,7 @@ def build_deblur_plan(
         # (rfft/overlap/batch_axis) passed without a mesh
         return _plan(problem.op, config=config, rfft=rfft, overlap=overlap,
                      tail=tail, fused=fused, batch_axis=batch_axis,
-                     wire_dtype=wire_dtype)
+                     wire_dtype=wire_dtype, prox=prox)
     h, w = problem.image.shape[-2:]
     if tune:
         pins = {
@@ -180,7 +208,7 @@ def build_deblur_plan(
             for k, v in dict(
                 n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
                 fused=fused, batch_axis=batch_axis, axis_name=axis_name,
-                wire_dtype=wire_dtype,
+                wire_dtype=wire_dtype, prox=prox,
             ).items()
             if v is not None
         }
@@ -204,7 +232,7 @@ def build_deblur_plan(
     return _plan(
         problem.op, mesh, config=config, n1=n1, n2=n2, rfft=rfft,
         overlap=overlap, tail=tail, fused=fused, batch_axis=batch_axis,
-        axis_name=axis_name, wire_dtype=wire_dtype,
+        axis_name=axis_name, wire_dtype=wire_dtype, prox=prox,
     )
 
 

@@ -52,11 +52,18 @@ def ista_init(op, y: Array, x0: Array | None = None) -> IstaState:
     return IstaState(x=x, x_prev=x, t_mom=jnp.ones(batch, y.dtype))
 
 
-def ista_step(op, y: Array, state: IstaState, p: IstaParams) -> IstaState:
-    """One Alg. 1 iteration: residual -> gradient -> threshold."""
+def ista_step(op, y: Array, state: IstaState, p: IstaParams, prox=None) -> IstaState:
+    """One Alg. 1 iteration: residual -> gradient -> prox.
+
+    ``prox=None`` is the paper's identity-basis soft threshold (line 5);
+    any ``repro.ops.prox.Prox`` swaps the prior while keeping lines 3-4.
+    """
     r = y - op.matvec(state.x)  # line 3: residual
     delta = p.tau * op.rmatvec(r)  # line 4: gradient step
-    x_new = ista_update(state.x, delta, p.alpha * p.tau)  # line 5 (*)
+    if prox is None:
+        x_new = ista_update(state.x, delta, p.alpha * p.tau)  # line 5 (*)
+    else:
+        x_new = prox.apply(state.x + delta, p.alpha * p.tau)
     return IstaState(x=x_new, x_prev=state.x, t_mom=state.t_mom)
 
 
@@ -67,7 +74,7 @@ def ista_step(op, y: Array, state: IstaState, p: IstaParams) -> IstaState:
 # exact pseudo-code when tau is absorbed into alpha.
 
 
-def fista_step(op, y: Array, state: IstaState, p: IstaParams) -> IstaState:
+def fista_step(op, y: Array, state: IstaState, p: IstaParams, prox=None) -> IstaState:
     """Beyond-paper: Nesterov-accelerated ISTA, same matvec cost.
 
     ``t_mom`` may be batch-shaped (per-signal momentum, see
@@ -81,7 +88,10 @@ def fista_step(op, y: Array, state: IstaState, p: IstaParams) -> IstaState:
     v = state.x + beta * (state.x - state.x_prev)  # extrapolation point
     r = y - op.matvec(v)
     delta = p.tau * op.rmatvec(r)
-    x_new = ista_update(v, delta, p.alpha * p.tau)
+    if prox is None:
+        x_new = ista_update(v, delta, p.alpha * p.tau)
+    else:
+        x_new = prox.apply(v + delta, p.alpha * p.tau)
     return IstaState(x=x_new, x_prev=state.x, t_mom=t_next)
 
 

@@ -44,6 +44,8 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.ops import prox as prox_mod
+
 from . import admm as admm_mod
 from . import ista as ista_mod
 from .circulant import DenseOperator, PartialCirculant
@@ -114,6 +116,7 @@ def make_stepper(
     sigma: float = 0.1,
     tau: Optional[float] = None,
     plan=None,
+    prox=None,
 ) -> Stepper:
     """Lower (problem, method) to a Stepper on the plan's backend.
 
@@ -122,10 +125,17 @@ def make_stepper(
     the sharded four-step transforms — the stepper contract (init / step /
     extract-flat-x) is identical, which is what lets every driver below run
     unchanged on both backends.
+
+    ``prox=`` swaps the prior (repro.ops.prox); None defaults to the plan's
+    ``prox`` and then to the paper's identity-basis soft threshold, which
+    keeps the fused Pallas tails eligible.  A non-l1 prox composes the
+    z-update outside the fused kernels instead.
     """
+    if prox is None and plan is not None:
+        prox = getattr(plan, "prox", None)
     if plan is not None and getattr(plan, "is_distributed", False):
         return plan.build_stepper(
-            problem, method, alpha=alpha, rho=rho, sigma=sigma, tau=tau
+            problem, method, alpha=alpha, rho=rho, sigma=sigma, tau=tau, prox=prox
         )
     tail = getattr(plan, "tail", "jnp") if plan is not None else "jnp"
     op, y = problem.op, problem.y
@@ -137,7 +147,7 @@ def make_stepper(
         step_fn = ista_mod.fista_step if method == "fista" else ista_mod.ista_step
         return Stepper(
             init=lambda: ista_mod.ista_init(op, y),
-            step=lambda s: step_fn(op, y, s, p),
+            step=lambda s: step_fn(op, y, s, p, prox=prox),
             extract=lambda s: s.x,
         )
     if method in ("admm", "padmm"):
@@ -146,7 +156,7 @@ def make_stepper(
         const = admm_mod.dense_admm_setup(op, y, rho)
         return Stepper(
             init=lambda: admm_mod.dense_admm_init(op, y),
-            step=lambda s: admm_mod.dense_admm_step(const, s, alpha, rho),
+            step=lambda s: admm_mod.dense_admm_step(const, s, alpha, rho, prox=prox),
             extract=lambda s: s.z,  # z is the sparse iterate
         )
     if method == "cpadmm":
@@ -160,9 +170,11 @@ def make_stepper(
             tau2=jnp.asarray(1.0 if tau is None else tau, y.dtype),
         )
         const = admm_mod.cpadmm_setup(op, y, p)
-        if tail == "pallas":
+        if tail == "pallas" and prox_mod.is_l1(prox):
             # plan attribute tail='pallas' on the local backend: the fused
-            # kernels/cpadmm_tail substrate (core.kernel_backend)
+            # kernels/cpadmm_tail substrate (core.kernel_backend).  The fused
+            # kernel bakes in the soft threshold, so it's only eligible for
+            # the l1 prior; other proxes take the composable jnp tail below.
             from repro.kernels.cpadmm_tail.ops import interpret_default
 
             from .kernel_backend import cpadmm_step_pallas
@@ -170,7 +182,7 @@ def make_stepper(
             interpret = interpret_default()
             step = lambda s: cpadmm_step_pallas(op, const, s, p, interpret=interpret)
         else:
-            step = lambda s: admm_mod.cpadmm_step(op, const, s, p)
+            step = lambda s: admm_mod.cpadmm_step(op, const, s, p, prox=prox)
         return Stepper(
             init=lambda: admm_mod.cpadmm_init(op, y),
             step=step,

@@ -88,6 +88,36 @@ def starfield(
     return jnp.where(img < 0.02, 0.0, img)
 
 
+def extended_emission(
+    key: Array,
+    h: int = 256,
+    w: int = 256,
+    n_sources: int = 3,
+    background: float = 0.05,
+    dtype=jnp.float32,
+) -> Array:
+    """Piecewise-constant extended-emission map (Herschel-style dust/cloud
+    field): ``n_sources`` flat-topped disks of random center/radius/intensity
+    over a faint uniform background.  The complement of :func:`starfield` —
+    almost nowhere zero but gradient-sparse, which is the regime where the
+    TV prior (``repro.ops.prox.TVProx``) beats the paper's l1 threshold
+    (``repro.core.mapmaking`` / tests pin the gap).  Intensities in [0, 1].
+    """
+    yy = jnp.arange(h, dtype=dtype)[:, None]
+    xx = jnp.arange(w, dtype=dtype)[None, :]
+    params = jax.random.uniform(key, (n_sources, 4), dtype)  # cy cx r amp
+
+    def disk(img, p):
+        cy, cx = p[0] * h, p[1] * w
+        r = (0.10 + 0.18 * p[2]) * min(h, w)
+        amp = 0.4 + 0.6 * p[3]
+        inside = (yy - cy) ** 2 + (xx - cx) ** 2 <= r * r
+        return jnp.where(inside, jnp.maximum(img, amp), img), None
+
+    img, _ = jax.lax.scan(disk, jnp.full((h, w), background, dtype), params)
+    return jnp.clip(img, 0.0, 1.0)
+
+
 # ---------------------------------------------------------------------------
 # LM substrate: deterministic token streams
 # ---------------------------------------------------------------------------

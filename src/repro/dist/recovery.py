@@ -126,15 +126,20 @@ def _transforms(
     return fwd, inv
 
 
-def _tail(tail: str):
+def _tail(tail: str, prox=None):
     """Elementwise-tail dispatch: pure-jnp math or the fused Pallas kernel.
 
     The Pallas path compiles for real on TPU and falls back to interpret
     mode elsewhere (CPU tests), mirroring the repo-wide kernel convention.
+    The fused kernel bakes in the l1 soft threshold, so it is only taken
+    when ``is_l1(prox)``; any other elementwise prior composes through the
+    shared jnp tail (``core.admm.cpadmm_tail``) with the prox threaded in.
+    (Non-elementwise priors never reach here — the plan layer runs them at
+    the global level via :func:`dist_cpadmm_core`.)
     """
-    if tail == "jnp":
-        return cpadmm_tail
-    if tail == "pallas":
+    from repro.ops.prox import is_l1
+
+    if tail == "pallas" and is_l1(prox):
         from repro.kernels.cpadmm_tail.ops import fused_cpadmm_tail, interpret_default
 
         interpret = interpret_default()
@@ -147,7 +152,15 @@ def _tail(tail: str):
             )
 
         return run
-    raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
+    if tail not in ("jnp", "pallas"):
+        raise ValueError(f"tail must be 'jnp' or 'pallas', got {tail!r}")
+    if prox is None:
+        return cpadmm_tail
+
+    def run(x, cx, d_diag, pty, mu, nu, p):
+        return cpadmm_tail(x, cx, d_diag, pty, mu, nu, p, prox=prox)
+
+    return run
 
 
 class DistCpadmmParams(NamedTuple):
@@ -184,19 +197,21 @@ def dist_cpadmm_step(
     wire_dtype: str = "fp32",
     hier: bool = False,
     inter_wire_dtype: str = "fp32",
+    prox=None,
 ) -> DistCpadmmState:
     """One paper-faithful Alg. 3 iteration on local shard blocks.
 
     spec / b_spec: column-sharded spectra of C and B (half layout when
     ``rfft``).  d_diag: row-sharded diagonal of (P^T P + rho I)^{-1}.
     pty: row-sharded P^T y.  Mirrors ``core.admm.cpadmm_step`` line for
-    line; broadcasts over leading batch axes.
+    line; broadcasts over leading batch axes.  ``prox`` must be elementwise
+    (this step runs whole inside a shard_map — see :func:`_tail`).
     """
     fwd, inv = _transforms(
         rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype,
         hier, inter_wire_dtype,
     )
-    tail_fn = _tail(tail)
+    tail_fn = _tail(tail, prox)
 
     def apply(s: Array, r: Array) -> Array:
         return inv(s * fwd(r))
@@ -226,6 +241,7 @@ def dist_cpadmm_step_fused(
     wire_dtype: str = "fp32",
     hier: bool = False,
     inter_wire_dtype: str = "fp32",
+    prox=None,
 ) -> DistCpadmmState:
     """Fused Alg. 3 iteration: 2 all-to-alls, one elementwise tail.
 
@@ -237,22 +253,50 @@ def dist_cpadmm_step_fused(
     transforms run in the half layout — the x-update multiply is closed
     there because every factor is a Hermitian spectrum.  ``overlap=K``
     chunks both stacked transposes.  Broadcasts over leading batch axes
-    (the stack axis leads them).
+    (the stack axis leads them).  ``prox`` must be elementwise (see
+    :func:`_tail`).
     """
-    fwd_t, inv_t = _transforms(
-        rfft, state.x.shape[-1], spec.dtype, axis_name, overlap, wire_dtype,
-        hier, inter_wire_dtype,
+    x, cx = dist_cpadmm_core(
+        spec, b_spec, state.v + state.mu, state.z - state.nu, p,
+        axis_name, rfft, overlap, wire_dtype, hier, inter_wire_dtype,
     )
-    tail_fn = _tail(tail)
-    fwd = fwd_t(jnp.stack([state.v + state.mu, state.z - state.nu]))
-    w, zf = fwd[0], fwd[1]
-    xf = b_spec * (p.rho * jnp.conj(spec) * w + p.sigma * zf)  # spectrum of x
-    inv = inv_t(jnp.stack([xf, spec * xf]))
-    x, cx = inv[0], inv[1]
-
+    tail_fn = _tail(tail, prox)
     # fused elementwise tail: v-update, threshold, both dual updates
     v, z, mu, nu = tail_fn(x, cx, d_diag, pty, state.mu, state.nu, p)
     return DistCpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)
+
+
+def dist_cpadmm_core(
+    spec: Array,
+    b_spec: Array,
+    vmu: Array,
+    znu: Array,
+    p: DistCpadmmParams,
+    axis_name: str = MODEL_AXIS,
+    rfft: bool = False,
+    overlap: int = 1,
+    wire_dtype: str = "fp32",
+    hier: bool = False,
+    inter_wire_dtype: str = "fp32",
+) -> tuple:
+    """The fused step's transform core: ``(v + mu, z - nu) -> (x, C x)``.
+
+    Exactly the frequency-domain x-update of :func:`dist_cpadmm_step_fused`
+    (which calls this, so the two can never drift): one stacked forward
+    FFT, the fused local B·C^T multiply, one stacked inverse FFT.  Split
+    out so the plan layer can shard_map *only* the transforms when the
+    prior is non-elementwise (TV/wavelet) — the tail then runs at the
+    global jit level where the prox sees whole signals.
+    """
+    fwd_t, inv_t = _transforms(
+        rfft, vmu.shape[-1], spec.dtype, axis_name, overlap, wire_dtype,
+        hier, inter_wire_dtype,
+    )
+    fwd = fwd_t(jnp.stack([vmu, znu]))
+    w, zf = fwd[0], fwd[1]
+    xf = b_spec * (p.rho * jnp.conj(spec) * w + p.sigma * zf)  # spectrum of x
+    inv = inv_t(jnp.stack([xf, spec * xf]))
+    return inv[0], inv[1]
 
 
 # --------------------------------------------------------------------------

@@ -86,13 +86,27 @@ def _parser() -> argparse.ArgumentParser:
                     help="compressed-domain deblurring workload (Sec. 7): "
                          "--batch starfield frames sensed through one joint "
                          "A = P (C B) operator; reports per-frame PSNR")
-    ap.add_argument("--blur-order", type=int, default=5,
-                    help="raster moving-average blur order L (with --deblur)")
+    ap.add_argument("--blur-order", type=float, default=5,
+                    help="blur width knob (with --deblur): raster length L "
+                         "for moving-average, sigma for gaussian, first-null "
+                         "radius for airy")
+    ap.add_argument("--blur-kind", default="moving-average",
+                    choices=("moving-average", "gaussian", "airy"),
+                    help="PSF family for --deblur (repro.core.circulant)")
     ap.add_argument("--size", type=int, default=64,
                     help="frame extent: n = size*size (with --deblur)")
     ap.add_argument("--sensing", default="romberg",
                     choices=("gaussian", "romberg"),
                     help="sensing circulant family (with --deblur)")
+    ap.add_argument("--prior", default="l1",
+                    choices=("l1", "tv", "wavelet", "nonneg-l1"),
+                    help="recovery prior (repro.ops.prox): l1 is the paper's "
+                         "soft threshold (fused kernels stay on); tv is "
+                         "anisotropic 2-D total variation (frames must be "
+                         "square: --size with --deblur, sqrt(n) otherwise); "
+                         "wavelet thresholds orthogonal Haar detail "
+                         "coefficients; nonneg-l1 adds a positivity "
+                         "constraint")
     ap.add_argument("--mesh", default=None,
                     help="distributed plan: 'M' (model axis size) or 'DxM' "
                          "(data x model); e.g. --mesh 8 or --mesh 2x4")
@@ -143,8 +157,37 @@ def parse_mesh(mesh_arg: str | None):
     raise ValueError(f"--mesh must be 'M' or 'DxM', got {mesh_arg!r}")
 
 
+def make_prior(prior: str, n: int, size: int | None = None):
+    """CLI ``--prior`` name -> a ``repro.ops.prox`` instance (None for l1).
+
+    l1 maps to None so the default path keeps its fused-kernel lowering and
+    bit-exactness pins; tv needs a 2-D extent — ``--size`` under --deblur,
+    else the signal must be square (n a perfect square).
+    """
+    from repro.ops.prox import NonNegL1Prox, TVProx, WaveletProx
+
+    if prior == "l1":
+        return None
+    if prior == "nonneg-l1":
+        return NonNegL1Prox()
+    if prior == "wavelet":
+        return WaveletProx()
+    if prior == "tv":
+        if size is not None:
+            return TVProx(shape=(size, size))
+        side = int(round(n ** 0.5))
+        if side * side != n:
+            raise SystemExit(
+                f"--prior tv needs a square frame: n={n} is not a perfect "
+                f"square (use --deblur --size, or a square --n)"
+            )
+        return TVProx(shape=(side, side))
+    raise ValueError(f"unknown prior {prior!r}")
+
+
 def build_plan(op, mesh_arg: str | None, n1=None, rfft=False, overlap=1,
-               config=None, tune=None, batch=None, wire_dtype="fp32"):
+               config=None, tune=None, batch=None, wire_dtype="fp32",
+               prox=None):
     """Lower ``op`` per the CLI mesh spec: None (local) or 'M' / 'DxM'.
 
     ``config=`` forwards a full ``repro.ops.PlanConfig``; ``tune=`` asks the
@@ -167,15 +210,18 @@ def build_plan(op, mesh_arg: str | None, n1=None, rfft=False, overlap=1,
             pins["batch_axis"] = batch_axis
         if wire_dtype != "fp32":
             pins["wire_dtype"] = wire_dtype
+        if prox is not None:
+            pins["prox"] = prox
         return plan(op, mesh, config=config, tune=tune, batch=batch, **pins)
     if config is not None:
         return plan(op, mesh, config=config)
     if mesh is None:
         # the single validation site rejects --rfft/--overlap/--wire-dtype
         # without --mesh
-        return plan(op, rfft=rfft, overlap=overlap, wire_dtype=wire_dtype)
+        return plan(op, rfft=rfft, overlap=overlap, wire_dtype=wire_dtype,
+                    prox=prox)
     return plan(op, mesh, n1=n1, rfft=rfft, overlap=overlap,
-                batch_axis=batch_axis, wire_dtype=wire_dtype)
+                batch_axis=batch_axis, wire_dtype=wire_dtype, prox=prox)
 
 
 def build_deblur_workload(args):
@@ -196,10 +242,12 @@ def build_deblur_workload(args):
     dp = build_multiframe_deblur_problem(
         jax.random.PRNGKey(args.seed + 1), frames,
         blur_order=args.blur_order, subsample=0.5, sensing=args.sensing,
+        blur_kind=args.blur_kind,
     )
     prob = RecoveryProblem(op=dp.op, y=dp.y,
                            x_true=frames.reshape(args.batch, -1))
     mesh, batch_axis = parse_mesh(args.mesh)
+    prox = make_prior(args.prior, args.size * args.size, size=args.size)
     if args.tune:
         # pin only explicitly-set flags so the tuner keeps its search space
         pins = {}
@@ -211,6 +259,8 @@ def build_deblur_workload(args):
             pins["n1"] = args.n1
         if args.wire_dtype != "fp32":
             pins["wire_dtype"] = args.wire_dtype
+        if prox is not None:
+            pins["prox"] = prox
         pl = build_deblur_plan(dp, mesh, tune=args.tune, batch=args.batch,
                                **pins)
     else:
@@ -220,7 +270,8 @@ def build_deblur_workload(args):
                                batch_axis=batch_axis,
                                wire_dtype=(args.wire_dtype
                                            if args.wire_dtype != "fp32"
-                                           else None))
+                                           else None),
+                               prox=prox)
     return prob, pl, dp
 
 
@@ -246,14 +297,15 @@ def main(argv=None):
         prob, pl, dp = build_deblur_workload(args)
         print(f"deblurring batch={args.batch} frames of "
               f"{args.size}x{args.size} (n={n}), blur L={args.blur_order}, "
-              f"m={dp.op.m}, sensing={args.sensing}, method={args.method}"
+              f"m={dp.op.m}, sensing={args.sensing}, method={args.method}, "
+              f"prior={args.prior}"
               + (f", mesh={args.mesh} (plan API)" if args.mesh else ""))
     else:
         n = args.n
         m, k = paper_regime(n)
         dp = None
         print(f"recovering batch={args.batch} signals, n={n}, m={m}, k={k}, "
-              f"method={args.method}"
+              f"method={args.method}, prior={args.prior}"
               + (f", mesh={args.mesh} (plan API)" if args.mesh else ""))
 
         x_true = sparse_signal(jax.random.PRNGKey(args.seed), n, k,
@@ -263,7 +315,8 @@ def main(argv=None):
         prob = RecoveryProblem(op=op, y=op.matvec(x_true), x_true=x_true)
         pl = build_plan(op, args.mesh, n1=args.n1, rfft=args.rfft,
                         overlap=args.overlap, tune=args.tune,
-                        batch=args.batch, wire_dtype=args.wire_dtype)
+                        batch=args.batch, wire_dtype=args.wire_dtype,
+                        prox=make_prior(args.prior, n))
     if args.tune:
         print(f"tuned plan [{args.tune}]: {pl.config.describe()}")
     x_true = prob.x_true

@@ -49,6 +49,13 @@ _LAZY = {
     "RecoveryOperator": "operator",
     "PlanCache": "tune",
     "tuned_config": "tune",
+    "Prox": "prox",
+    "L1Prox": "prox",
+    "NonNegL1Prox": "prox",
+    "TVProx": "prox",
+    "WaveletProx": "prox",
+    "prox_from_dict": "prox",
+    "prox_to_dict": "prox",
 }
 
 __all__ = sorted(_LAZY) + ["spectral"]

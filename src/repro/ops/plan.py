@@ -91,10 +91,12 @@ from repro.dist.fft import (
 from repro.dist.recovery import (
     DistCpadmmParams,
     DistCpadmmState,
+    dist_cpadmm_core,
     dist_cpadmm_step,
     dist_cpadmm_step_fused,
 )
 
+from . import prox as prox_mod
 from . import spectral
 
 Array = jax.Array
@@ -172,12 +174,21 @@ class PlanConfig:
     wire_dtype: str = "fp32"
     hier_axes: Any = None  # (H, D): two-stage transpose over (host, device)
     inter_wire_dtype: str = "fp32"  # DCN-hop payload of the two-stage path
+    prox: Any = None  # the prior (repro.ops.prox.Prox); None = l1 threshold
 
     def validate(self, distributed: bool) -> "PlanConfig":
         """THE validation site for plan knobs (every entry point funnels
         here via :func:`resolve_plan_config`); returns self for chaining."""
         if self.tail not in ("jnp", "pallas"):
             raise ValueError(f"tail must be 'jnp' or 'pallas', got {self.tail!r}")
+        if self.prox is not None and not (
+            hasattr(self.prox, "apply") and hasattr(self.prox, "tag")
+        ):
+            raise ValueError(
+                f"prox must be None (the l1 soft threshold) or a "
+                f"repro.ops.prox.Prox (apply(x, gamma) + tag); got "
+                f"{self.prox!r}"
+            )
         if not isinstance(self.overlap, int) or self.overlap < 1:
             raise ValueError(f"overlap must be a positive int, got {self.overlap!r}")
         if self.wire_dtype not in WIRE_DTYPES:
@@ -257,6 +268,7 @@ class PlanConfig:
         for key in ("batch_axis", "axis_name", "hier_axes"):
             if isinstance(d[key], tuple):
                 d[key] = list(d[key])
+        d["prox"] = prox_mod.prox_to_dict(self.prox)
         return d
 
     @classmethod
@@ -265,6 +277,8 @@ class PlanConfig:
         for key in ("batch_axis", "axis_name", "hier_axes"):
             if isinstance(d.get(key), list):
                 d[key] = tuple(d[key])
+        if d.get("prox") is not None:
+            d["prox"] = prox_mod.prox_from_dict(d["prox"])
         return cls(**d)
 
     def describe(self) -> str:
@@ -288,6 +302,10 @@ class PlanConfig:
             parts.append("hier=flat")  # factored axis, flat exchange
         if self.inter_wire_dtype != "fp32":
             parts.append(f"inter_wire={self.inter_wire_dtype}")
+        if self.prox is not None:
+            # the prior changes the compiled z-update (and serve engines must
+            # never share across priors) — every non-default prox shows
+            parts.append(f"prox={self.prox.tag}")
         return " ".join(parts)
 
 
@@ -420,6 +438,7 @@ class ExecutionPlan:
     wire_dtype: str = "fp32"
     hier_axes: Any = None
     inter_wire_dtype: str = "fp32"
+    prox: Any = None
     spec2d: Any = None
     mask2d: Any = None
     norm_bound: Any = None
@@ -450,6 +469,7 @@ class ExecutionPlan:
             wire_dtype=self.wire_dtype,
             hier_axes=self.hier_axes,
             inter_wire_dtype=self.inter_wire_dtype,
+            prox=self.prox,
         )
 
     @property
@@ -519,25 +539,28 @@ class ExecutionPlan:
 
     # -- steppers (consumed by repro.core.solvers drivers) -----------------
     def build_stepper(self, problem, method: str, alpha=1e-4, rho=0.1,
-                      sigma=0.1, tau=None):
-        """Lower (problem, method) to a core ``Stepper`` on this backend."""
+                      sigma=0.1, tau=None, prox=None):
+        """Lower (problem, method) to a core ``Stepper`` on this backend.
+
+        ``prox=None`` defaults to the plan's own ``prox`` knob."""
+        prox = prox if prox is not None else self.prox
         if not self.is_distributed:
             from repro.core.solvers import make_stepper
 
             return make_stepper(
                 problem, method, alpha=alpha, rho=rho, sigma=sigma, tau=tau,
-                plan=self,
+                plan=self, prox=prox,
             )
         if method in _ISTA_METHODS:
-            return self._ista_stepper(problem, method, alpha, tau)
+            return self._ista_stepper(problem, method, alpha, tau, prox)
         if method == "cpadmm":
-            return self._cpadmm_stepper(problem, alpha, rho, sigma, tau)
+            return self._cpadmm_stepper(problem, alpha, rho, sigma, tau, prox)
         raise ValueError(
             f"method {method!r} has no distributed lowering; valid "
             f"distributed methods: ista, fista, cpista, cpadmm"
         )
 
-    def _ista_stepper(self, problem, method: str, alpha, tau):
+    def _ista_stepper(self, problem, method: str, alpha, tau, prox=None):
         """Distributed CPISTA/FISTA: the core step math verbatim, with the
         matvecs lowered to planned four-step transforms.  State lives in
         the sharded (n1, n2) layout; ``extract`` flattens locally."""
@@ -555,6 +578,14 @@ class ExecutionPlan:
         )
         p = ista_mod.IstaParams(alpha=jnp.asarray(alpha, dt), tau=tau_v)
         step_fn = ista_mod.fista_step if method == "fista" else ista_mod.ista_step
+        # the dist ISTA step applies its prox at the global jit level (only
+        # the matvecs are shard_mapped), so any prior threads straight in —
+        # non-elementwise priors just need the flat-signal view of the
+        # (n1, n2)-layout iterate (NOT a plain reshape: the four-step layout
+        # is strided, see dist.fft.layout_2d)
+        step_prox = prox if prox_mod.is_elementwise(prox) else _LayoutProx(
+            prox, self.n1, self.n2
+        )
         zeros = jnp.zeros_like(y2d)
         # per-signal momentum (batch-shaped) — matches ista_init, so frozen /
         # recycled slots keep a solo run's schedule (core.solvers.rearm_slots)
@@ -562,13 +593,20 @@ class ExecutionPlan:
             init=lambda: ista_mod.IstaState(
                 x=zeros, x_prev=zeros, t_mom=jnp.ones(y_full.shape[:-1], dt)
             ),
-            step=lambda s: step_fn(op2d, y2d, s, p),
+            step=lambda s: step_fn(op2d, y2d, s, p, prox=step_prox),
             extract=lambda s: unlayout_2d(s.x),
         )
 
-    def _cpadmm_stepper(self, problem, alpha, rho, sigma, tau):
+    def _cpadmm_stepper(self, problem, alpha, rho, sigma, tau, prox=None):
         """Distributed CPADMM: the planned step functions of
-        :mod:`repro.dist.recovery` under a per-iteration shard_map."""
+        :mod:`repro.dist.recovery` under a per-iteration shard_map.
+
+        Elementwise priors (l1, nonneg-l1) run inside the shard_map step —
+        the tail stays local to each shard, and the fused Pallas tail stays
+        eligible for l1.  Non-elementwise priors (TV, wavelet) need the whole
+        signal: the step splits into the shard_mapped transform core
+        (:func:`repro.dist.recovery.dist_cpadmm_core`) plus a global-level
+        tail where GSPMD partitions the prox's rolls/reshapes."""
         from repro.core.solvers import Stepper
 
         y_full = self._scattered_measurements(problem)
@@ -590,32 +628,74 @@ class ExecutionPlan:
         d_diag = jnp.where(
             self.mask2d > 0, 1.0 / (1.0 + p.rho), 1.0 / p.rho
         ).astype(dt)
-        step_fn = dist_cpadmm_step_fused if self.fused else dist_cpadmm_step
         rowS, rowB = self._row(False), self._row(batched)
         state_spec = DistCpadmmState(*(rowB,) * 5)
+        zeros = jnp.zeros_like(pty2d)
+        init = lambda: DistCpadmmState(zeros, zeros, zeros, zeros, zeros)
 
-        def local_step(spec, bs, dd, pty, state, pp):
-            return step_fn(
-                spec, bs, dd, pty, state, pp,
-                self.axis_name, self.rfft, self.overlap, self.tail,
+        if prox_mod.is_elementwise(prox):
+            step_fn = dist_cpadmm_step_fused if self.fused else dist_cpadmm_step
+
+            def local_step(spec, bs, dd, pty, state, pp):
+                return step_fn(
+                    spec, bs, dd, pty, state, pp,
+                    self.axis_name, self.rfft, self.overlap, self.tail,
+                    self.wire_dtype, self.hier, self.inter_wire_dtype,
+                    prox=prox,
+                )
+
+            step_sm = shard_map(
+                local_step,
+                mesh=self.mesh,
+                in_specs=(
+                    self._col(False), self._col(False), rowS, rowB, state_spec,
+                    DistCpadmmParams(*(P(),) * 5),
+                ),
+                out_specs=state_spec,
+                check_vma=False,
+            )
+            return Stepper(
+                init=init,
+                step=lambda s: step_sm(self.spec2d, b_spec, d_diag, pty2d, s, p),
+                extract=lambda s: unlayout_2d(s.z),
+            )
+
+        core_sm = self._cpadmm_core_sm(rowB)
+        lprox = _LayoutProx(prox, self.n1, self.n2)
+
+        def hybrid_step(s):
+            x, cx = core_sm(self.spec2d, b_spec, s.v + s.mu, s.z - s.nu, p)
+            v = d_diag * (pty2d + p.rho * (cx - s.mu))
+            z = lprox.apply(x + s.nu, p.alpha / p.sigma)
+            mu = s.mu + p.tau1 * (v - cx)
+            nu = s.nu + p.tau2 * (x - z)
+            return DistCpadmmState(x=x, v=v, z=z, mu=mu, nu=nu)
+
+        return Stepper(
+            init=init,
+            step=hybrid_step,
+            extract=lambda s: unlayout_2d(s.z),
+        )
+
+    def _cpadmm_core_sm(self, rowB: P):
+        """shard_map of the CPADMM transform core (x-update + C x) — the
+        non-elementwise-prior step runs this inside an otherwise global-level
+        iteration so the prior sees whole signals."""
+        col = self._col(False)
+
+        def local_core(spec, bs, vmu, znu, pp):
+            return dist_cpadmm_core(
+                spec, bs, vmu, znu, pp,
+                self.axis_name, self.rfft, self.overlap,
                 self.wire_dtype, self.hier, self.inter_wire_dtype,
             )
 
-        step_sm = shard_map(
-            local_step,
+        return shard_map(
+            local_core,
             mesh=self.mesh,
-            in_specs=(
-                self._col(False), self._col(False), rowS, rowB, state_spec,
-                DistCpadmmParams(*(P(),) * 5),
-            ),
-            out_specs=state_spec,
+            in_specs=(col, col, rowB, rowB, DistCpadmmParams(*(P(),) * 5)),
+            out_specs=(rowB, rowB),
             check_vma=False,
-        )
-        zeros = jnp.zeros_like(pty2d)
-        return Stepper(
-            init=lambda: DistCpadmmState(zeros, zeros, zeros, zeros, zeros),
-            step=lambda s: step_sm(self.spec2d, b_spec, d_diag, pty2d, s, p),
-            extract=lambda s: unlayout_2d(s.z),
         )
 
     # -- abstract iteration block (dry-run / HLO-analysis entry point) -----
@@ -625,34 +705,86 @@ class ExecutionPlan:
         ``iters`` scanned iterations inside one shard_map — a pure function
         of its operands, so ``.lower()`` with ShapeDtypeStructs exposes the
         compiled HLO (launch/cs_dryrun.py's roofline walks it).  The state
-        (and pty) carry a leading batch dim sharded over ``batch_axis``."""
-        step_fn = dist_cpadmm_step_fused if self.fused else dist_cpadmm_step
+        (and pty) carry a leading batch dim sharded over ``batch_axis``.
+
+        With a non-elementwise plan ``prox`` (TV/wavelet) the block is the
+        hybrid split instead — shard_mapped transform core, global prox tail
+        — jitted with explicit in_shardings so ``.lower()`` still exposes the
+        partitioned HLO the tuner's cost model walks."""
         p = DistCpadmmParams(
             *(jnp.float32(v) for v in (alpha, rho, sigma, tau, tau))
         )
+        rowS, rowB, col = self._row(False), self._row(True), self._col(False)
+        state_spec = DistCpadmmState(*(rowB,) * 5)
 
-        def block(spec, b_spec, d_diag, pty, state):
+        if prox_mod.is_elementwise(self.prox):
+            prox = self.prox
+            step_fn = dist_cpadmm_step_fused if self.fused else dist_cpadmm_step
+
+            def block(spec, b_spec, d_diag, pty, state):
+                def body(s, _):
+                    return step_fn(
+                        spec, b_spec, d_diag, pty, s, p,
+                        self.axis_name, self.rfft, self.overlap, self.tail,
+                        self.wire_dtype, self.hier, self.inter_wire_dtype,
+                        prox=prox,
+                    ), None
+
+                state, _ = lax.scan(body, state, None, length=iters)
+                return state
+
+            return jax.jit(
+                shard_map(
+                    block,
+                    mesh=self.mesh,
+                    in_specs=(col, col, rowS, rowB, state_spec),
+                    out_specs=state_spec,
+                    check_vma=False,
+                )
+            )
+
+        core_sm = self._cpadmm_core_sm(rowB)
+        lprox = _LayoutProx(self.prox, self.n1, self.n2)
+
+        def hybrid_block(spec, b_spec, d_diag, pty, state):
             def body(s, _):
-                return step_fn(
-                    spec, b_spec, d_diag, pty, s, p,
-                    self.axis_name, self.rfft, self.overlap, self.tail,
-                    self.wire_dtype, self.hier, self.inter_wire_dtype,
-                ), None
+                x, cx = core_sm(spec, b_spec, s.v + s.mu, s.z - s.nu, p)
+                v = d_diag * (pty + p.rho * (cx - s.mu))
+                z = lprox.apply(x + s.nu, p.alpha / p.sigma)
+                mu = s.mu + p.tau1 * (v - cx)
+                nu = s.nu + p.tau2 * (x - z)
+                return DistCpadmmState(x=x, v=v, z=z, mu=mu, nu=nu), None
 
             state, _ = lax.scan(body, state, None, length=iters)
             return state
 
-        rowS, rowB, col = self._row(False), self._row(True), self._col(False)
-        state_spec = DistCpadmmState(*(rowB,) * 5)
+        sh = lambda spec: jax.sharding.NamedSharding(self.mesh, spec)
         return jax.jit(
-            shard_map(
-                block,
-                mesh=self.mesh,
-                in_specs=(col, col, rowS, rowB, state_spec),
-                out_specs=state_spec,
-                check_vma=False,
-            )
+            hybrid_block,
+            in_shardings=(
+                sh(col), sh(col), sh(rowS), sh(rowB),
+                DistCpadmmState(*(sh(rowB),) * 5),
+            ),
         )
+
+
+class _LayoutProx:
+    """A Prox adapted to the four-step (n1, n2) iterate layout.
+
+    ``layout_2d`` is *strided* (``A[j1, j2] = x[j1 + n1*j2]``), not a
+    row-major reshape, so a flat-signal prox applied to a distributed
+    iterate must round-trip through ``unlayout_2d``/``layout_2d`` — a plain
+    reshape would scramble the signal and be silently wrong.  Under the
+    global jit both are data movements GSPMD partitions."""
+
+    def __init__(self, prox, n1: int, n2: int):
+        self._prox = prox
+        self._n1 = n1
+        self._n2 = n2
+
+    def apply(self, a2d: Array, gamma) -> Array:
+        flat = self._prox.apply(unlayout_2d(a2d), gamma)
+        return layout_2d(flat, self._n1, self._n2)
 
 
 class _Layout2DOperator:
@@ -724,7 +856,7 @@ def _wire_guard(wire_plan: ExecutionPlan) -> ExecutionPlan:
 def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
     """Lower ``op`` under an already-validated ``PlanConfig``."""
     if mesh is None:
-        return ExecutionPlan(op=op, tail=cfg.tail, fused=cfg.fused)
+        return ExecutionPlan(op=op, tail=cfg.tail, fused=cfg.fused, prox=cfg.prox)
     if hasattr(op, "circ"):  # PartialCirculant: mask = indicator of omega
         circ, omega = op.circ, op.omega
     elif hasattr(op, "spec") and hasattr(op, "col"):  # full Circulant
@@ -764,6 +896,7 @@ def _plan_with_config(op, mesh, cfg: PlanConfig) -> ExecutionPlan:
         wire_dtype=cfg.wire_dtype,
         hier_axes=hier_axes,
         inter_wire_dtype=cfg.inter_wire_dtype,
+        prox=cfg.prox,
         spec2d=spec2d,
         mask2d=layout_2d(mask, n1, n2),
         norm_bound=op.operator_norm_bound(),
@@ -790,6 +923,7 @@ def plan(
     wire_dtype: Optional[str] = None,
     hier_axes: Any = None,
     inter_wire_dtype: Optional[str] = None,
+    prox: Any = None,
 ) -> ExecutionPlan:
     """Lower ``op`` to an execution plan (see module docstring).
 
@@ -830,7 +964,7 @@ def plan(
                 n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
                 fused=fused, batch_axis=batch_axis, axis_name=axis_name,
                 wire_dtype=wire_dtype, hier_axes=hier_axes,
-                inter_wire_dtype=inter_wire_dtype,
+                inter_wire_dtype=inter_wire_dtype, prox=prox,
             ).items()
             if v is not None
         }
@@ -846,7 +980,7 @@ def plan(
             n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
             fused=fused, batch_axis=batch_axis, axis_name=axis_name,
             wire_dtype=wire_dtype, hier_axes=hier_axes,
-            inter_wire_dtype=inter_wire_dtype,
+            inter_wire_dtype=inter_wire_dtype, prox=prox,
         )
     return _plan_with_config(op, mesh, cfg)
 
@@ -868,6 +1002,7 @@ def plan_from_parts(
     wire_dtype: Optional[str] = None,
     hier_axes: Any = None,
     inter_wire_dtype: Optional[str] = None,
+    prox: Any = None,
 ) -> ExecutionPlan:
     """Distributed plan from pre-sharded parts instead of an operator.
 
@@ -887,7 +1022,7 @@ def plan_from_parts(
         n1=n1, n2=n2, rfft=rfft, overlap=overlap, tail=tail,
         fused=fused, batch_axis=batch_axis, axis_name=axis_name,
         wire_dtype=wire_dtype, hier_axes=hier_axes,
-        inter_wire_dtype=inter_wire_dtype,
+        inter_wire_dtype=inter_wire_dtype, prox=prox,
     )
     if cfg.n1 is None or cfg.n2 is None:
         raise ValueError(
@@ -911,6 +1046,7 @@ def plan_from_parts(
         wire_dtype=cfg.wire_dtype,
         hier_axes=hier,
         inter_wire_dtype=cfg.inter_wire_dtype,
+        prox=cfg.prox,
         spec2d=spec2d,
         mask2d=mask2d,
         norm_bound=norm,

@@ -213,9 +213,14 @@ def cache_key(op, mesh, batch: Optional[int], pins: Optional[dict]) -> str:
     sig = (type(op).__name__, getattr(op, "n", None), getattr(op, "m", None))
     axes = tuple(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names)))
     dtype = str(getattr(getattr(op, "circ", op), "col", jnp.zeros(0)).dtype)
+
+    def _jsonable(v):
+        if hasattr(v, "to_dict") and hasattr(v, "tag"):  # a Prox pin
+            return v.to_dict()
+        return list(v) if isinstance(v, tuple) else v
+
     pin_s = json.dumps(
-        {k: list(v) if isinstance(v, tuple) else v
-         for k, v in sorted((pins or {}).items())}
+        {k: _jsonable(v) for k, v in sorted((pins or {}).items())}
     )
     return "|".join([
         f"op={sig}", f"mesh={axes}", f"batch={batch}", f"dtype={dtype}",
@@ -366,6 +371,7 @@ def candidate_configs(
                                             wire_dtype=wire,
                                             hier_axes=hier,
                                             inter_wire_dtype=iw,
+                                            prox=pins.get("prox"),
                                         ))
     if not out:
         raise ValueError(
@@ -388,9 +394,13 @@ def _group_key(cfg: PlanConfig) -> tuple:
     just its schedule — so fp32 and bf16 wires never share a compile.  So
     are ``hier_axes`` and ``inter_wire_dtype``: the hierarchical exchange
     compiles to different collectives entirely (intra-tier all-to-all +
-    inter-tier collective-permutes vs one monolithic all-to-all)."""
+    inter-tier collective-permutes vs one monolithic all-to-all).  ``prox``
+    too: a non-elementwise prior swaps the fused one-shard_map block for the
+    hybrid core+global-tail lowering, and even an elementwise swap changes
+    the tail math the walk prices."""
     return (cfg.rfft, cfg.n1, cfg.n2, cfg.tail, cfg.fused, cfg.batch_axis,
-            cfg.axis_name, cfg.wire_dtype, cfg.hier_axes, cfg.inter_wire_dtype)
+            cfg.axis_name, cfg.wire_dtype, cfg.hier_axes, cfg.inter_wire_dtype,
+            cfg.prox)
 
 
 def _compile_group(mesh, cfg: PlanConfig, batch: int, iters: int):

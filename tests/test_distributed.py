@@ -21,6 +21,7 @@ PROGS = [
     "serve_prog.py",
     "wire_prog.py",
     "hier_prog.py",
+    "prox_prog.py",
 ]
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")

@@ -1,0 +1,130 @@
+"""Herschel-style multi-observation map-making (repro.core.mapmaking).
+
+The prox layer's flagship non-l1 scenario: dithered exposures through one
+shared compressed optic recover jointly under the TV prior and co-add into
+one map.  Pins: the factored per-frame operator view matches the shared-op
+view, the planned path matches local at 1e-5, and the recovered map's PSNR
+is golden-pinned — with the TV-vs-l1 gap asserted so the prior is shown to
+be load-bearing, not decorative.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mapmaking import (
+    build_mapmaking_plan,
+    build_mapmaking_problem,
+    coadd,
+    frame_operator,
+    mapmaking_metrics,
+    solve_mapmaking,
+)
+from repro.data.synthetic import extended_emission
+
+SIZE = 16
+SHIFTS = [0, 1, SIZE, SIZE + 1]  # 2x2 dither pattern on the raster
+
+
+@pytest.fixture(scope="module")
+def problem():
+    sky = extended_emission(jax.random.PRNGKey(7), SIZE, SIZE, n_sources=3)
+    return build_mapmaking_problem(
+        jax.random.PRNGKey(11), sky, SHIFTS, blur_order=1.0, subsample=0.5,
+        sensing="romberg", blur_kind="gaussian",
+    )
+
+
+def test_build_validation():
+    with pytest.raises(ValueError, match="sky map"):
+        build_mapmaking_problem(jax.random.PRNGKey(0), jnp.zeros((2, 8, 8)), [0])
+    with pytest.raises(ValueError, match="offset"):
+        build_mapmaking_problem(jax.random.PRNGKey(0), jnp.zeros((8, 8)), [])
+
+
+def test_frames_are_shifted_skies(problem):
+    flat = problem.sky.reshape(-1)
+    for f, s in enumerate(problem.shifts):
+        np.testing.assert_array_equal(
+            np.asarray(problem.deblur.image[f].reshape(-1)),
+            np.asarray(jnp.roll(flat, s)),
+        )
+    assert problem.deblur.y.shape == (len(SHIFTS), problem.deblur.op.m)
+
+
+def test_frame_operator_factored_view(problem):
+    """A_f = P (C B S_f) composed via shift circulants equals the shared
+    operator applied to the shifted sky — the identity that lets the whole
+    stack share one planned operator."""
+    flat = problem.sky.reshape(-1)
+    for f, s in enumerate(problem.shifts):
+        a = frame_operator(problem, f).matvec(flat)
+        b = problem.deblur.op.matvec(jnp.roll(flat, s))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(problem.deblur.y[f]),
+                                   np.asarray(b), atol=1e-5)
+
+
+def test_coadd_unshifts_and_averages(problem):
+    """co-adding the *true* shifted stack returns the sky exactly (the
+    unshift must invert the raster roll, including wrap)."""
+    n = SIZE * SIZE
+    z_true = problem.deblur.image.reshape(len(SHIFTS), n)
+    np.testing.assert_allclose(
+        np.asarray(coadd(problem, z_true)), np.asarray(problem.sky), atol=1e-6
+    )
+    m = mapmaking_metrics(problem, z_true)
+    assert float(m["psnr_db"]) > 100.0
+    # batch axes broadcast through coadd
+    z_b = jnp.stack([z_true, z_true])
+    assert coadd(problem, z_b).shape == (2, SIZE, SIZE)
+
+
+def test_default_plan_is_tv(problem):
+    pl = build_mapmaking_plan(problem)
+    assert "prox=tv[16x16" in pl.config.describe()
+    pl_l1 = build_mapmaking_plan(problem, prox=None)
+    assert "prox=" not in pl_l1.config.describe()
+
+
+def test_mapmaking_golden_psnr(problem):
+    """Golden pin (sky key 7, problem key 11, 600 CPADMM iterations,
+    alpha=1e-4): TV map PSNR recorded 47.8 dB vs l1 20.8 dB.  The band is
+    wide enough for cross-platform float drift, two-sided so suspicious
+    improvements get a human look, and the TV-over-l1 gap is the point."""
+    z_tv, m_tv = solve_mapmaking(problem, method="cpadmm", iters=600,
+                                 alpha=1e-4)
+    psnr_tv = float(m_tv["psnr_db"])
+    assert 44.0 < psnr_tv < 52.0, psnr_tv
+    pl_l1 = build_mapmaking_plan(problem, prox=None)
+    _, m_l1 = solve_mapmaking(problem, plan=pl_l1, method="cpadmm",
+                              iters=600, alpha=1e-4)
+    psnr_l1 = float(m_l1["psnr_db"])
+    assert psnr_tv > psnr_l1 + 15.0, (psnr_tv, psnr_l1)
+
+
+def test_mapmaking_planned_matches_local(problem):
+    """The acceptance scenario: the TV-prior stack through the planned path
+    (1-device mesh; the 8-device variant rides dist_progs/prox_prog.py)
+    matches the local solve at 1e-5 and holds the golden PSNR."""
+    from repro.dist.compat import make_mesh
+
+    z_l, m_l = solve_mapmaking(problem, method="cpadmm", iters=600,
+                               alpha=1e-4)
+    pl = build_mapmaking_plan(problem, make_mesh((1,), ("model",)), rfft=True)
+    z_d, m_d = solve_mapmaking(problem, plan=pl, method="cpadmm", iters=600,
+                               alpha=1e-4)
+    rel = float(jnp.linalg.norm(z_d - z_l) / (jnp.linalg.norm(z_l) + 1e-30))
+    assert rel <= 1e-5, rel
+    assert 44.0 < float(m_d["psnr_db"]) < 52.0
+
+
+def test_extended_emission_statistics():
+    sky = extended_emission(jax.random.PRNGKey(7), 32, 32, n_sources=3)
+    assert float(sky.min()) > 0.0 and float(sky.max()) <= 1.0
+    # gradient-sparse, not value-sparse: almost no zero pixels, few edges
+    img = sky
+    edges = (jnp.abs(jnp.roll(img, -1, 0) - img) > 1e-6).mean()
+    assert float(edges) < 0.5
+    assert float((sky > 0).mean()) == 1.0

@@ -67,6 +67,40 @@ def test_deblur_workload_tol_mode_local(capsys):
     assert "per-signal iterations" in out and "PSNR" in out
 
 
+def test_deblur_tv_prior_with_mesh_plan(capsys):
+    """--prior tv builds a TVProx on the frame grid and threads it through
+    build_deblur_plan onto the mesh path."""
+    recover.main([
+        "--deblur", "--batch", "2", "--size", "16", "--blur-kind", "gaussian",
+        "--blur-order", "1.0", "--prior", "tv", "--iters", "40",
+        "--chunk", "20", "--mesh", "1x1",
+    ])
+    out = capsys.readouterr().out
+    assert "prior=tv" in out and "PSNR" in out
+
+
+def test_prior_flag_local_sparse_recovery(capsys):
+    for prior in ("nonneg-l1", "wavelet"):
+        recover.main([
+            "--n", "256", "--batch", "1", "--method", "ista", "--iters", "40",
+            "--tol", "1e-2", "--prior", prior,
+        ])
+        out = capsys.readouterr().out
+        assert f"prior={prior}" in out and "per-signal" in out
+
+
+def test_make_prior():
+    from repro.ops.prox import NonNegL1Prox, TVProx, WaveletProx
+
+    assert recover.make_prior("l1", 256) is None
+    assert isinstance(recover.make_prior("nonneg-l1", 256), NonNegL1Prox)
+    assert isinstance(recover.make_prior("wavelet", 256), WaveletProx)
+    assert recover.make_prior("tv", 256) == TVProx(shape=(16, 16))
+    assert recover.make_prior("tv", 0, size=8) == TVProx(shape=(8, 8))
+    with pytest.raises(SystemExit, match="square"):
+        recover.make_prior("tv", 200)
+
+
 def test_method_error_lists_valid_methods(capsys):
     with pytest.raises(SystemExit):
         recover.main(["--method", "newton", "--n", "512"])
